@@ -1,0 +1,41 @@
+"""Paper Fig. 7: read/write performance across storage backends vs size.
+
+Paper: HDFS vs Lustre on Stampede — Lustre wins small transfers, HDFS wins
+large parallel reads. Here: the tier ladder (file-native, file@hdfs-profile,
+file@lustre-profile, host, device) over 1..32 MiB DataUnits. Profiled tiers
+are SIMULATED (published-order bandwidth models); native/host/device are
+real measurements on this machine. Derived: MB/s.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import DataUnit, make_backend
+from repro.core.memory import PROFILES, FileBackend
+
+SIZES_MB = (1, 8, 32)
+
+
+def run(tmp_root: str = "/tmp/repro_bench_fig7"):
+    backends_all = {
+        "file": make_backend("file", root=f"{tmp_root}/native"),
+        "hdfs(sim)": FileBackend(f"{tmp_root}/hdfs", PROFILES["hdfs"]),
+        "lustre(sim)": FileBackend(f"{tmp_root}/lustre", PROFILES["lustre"]),
+        "host": make_backend("host"),
+        "device": make_backend("device"),
+    }
+    rng = np.random.default_rng(0)
+    for mb in SIZES_MB:
+        arr = rng.normal(size=(mb * 1024 * 1024 // 4,)).astype(np.float32)
+        for tier, be in backends_all.items():
+            t_w = timeit(lambda: be.put("x", arr), repeats=2)
+            t_r = timeit(lambda: be.get("x"), repeats=2)
+            sim = "(SIMULATED)" if "sim" in tier else ""
+            emit(f"fig7_write/{tier}/{mb}MB", t_w, f"{mb / t_w:.0f}MB/s{sim}")
+            emit(f"fig7_read/{tier}/{mb}MB", t_r, f"{mb / t_r:.0f}MB/s{sim}")
+            be.delete("x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Kernel microbenches: oracle wall-time on this host + interpret-mode
+equivalence deltas (the TPU perf claim lives in the roofline analysis; this
+bench guards CPU-side correctness/perf regressions of the oracles)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.kmeans.ref import kmeans_assign_ref
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def run():
+    # kmeans map phase (paper's hot-spot): flops-normalized
+    pts = jax.random.normal(jax.random.key(0), (100_000, 8), jnp.float32)
+    cen = jax.random.normal(jax.random.key(1), (50, 8), jnp.float32)
+    f = jax.jit(kmeans_assign_ref)
+    t = timeit(lambda: jax.block_until_ready(f(pts, cen)))
+    flops = 2 * 100_000 * 50 * 8 * 2
+    emit("kernel/kmeans_ref/100kx50", t, f"{flops / t / 1e9:.1f}GFLOP/s")
+
+    q = jax.random.normal(jax.random.key(0), (1, 1024, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, 1024, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, 1024, 2, 64), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    t = timeit(lambda: jax.block_until_ready(f(q, k, v)))
+    flops = 4 * 1024 * 1024 * 8 * 64 / 2
+    emit("kernel/attention_ref/1k", t, f"{flops / t / 1e9:.1f}GFLOP/s")
+
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (2, 512, 256), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 512, 256)))
+    a = -jnp.exp(0.3 * jax.random.normal(ks[2], (256, 16)))
+    b = jax.random.normal(ks[3], (2, 512, 16))
+    c = jax.random.normal(ks[4], (2, 512, 16))
+    d = jnp.ones((256,))
+    f = jax.jit(selective_scan_ref)
+    t = timeit(lambda: jax.block_until_ready(f(x, dt, a, b, c, d)))
+    emit("kernel/selective_scan_ref/512", t,
+         f"{2 * 512 * 256 * 16 * 2 / t / 1e9:.2f}GFLOP/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Roofline table: re-emit the dry-run sweep's per-cell terms as bench rows.
+
+Reads experiments/dryrun/*.json (produced by ``python -m
+repro.launch.dryrun --all``). Derived: the three terms + bottleneck.
+us_per_call is the roofline step time (max of the three terms) in us.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run():
+    if not DRYRUN_DIR.exists():
+        emit("roofline/missing", 0.0, "run: python -m repro.launch.dryrun --all")
+        return
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") != "ok":
+            emit(name, 0.0, r.get("status", "?"))
+            continue
+        ro = r["roofline"]
+        step = max(ro["t_compute"], ro["t_memory"], ro["t_collective"])
+        emit(name, step,
+             f"bneck={ro['bottleneck']} frac={ro['roofline_fraction']:.3f} "
+             f"useful={ro['useful_flops_ratio']:.2f} "
+             f"peakGiB={ro['peak_mem_bytes'] / 2**30:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Measured train/decode step walltime for small presets on this host —
+the CPU-side end-to-end throughput guard (TPU numbers live in §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.launch.train import scaled_config
+from repro.models.model import build_model
+from repro.train import steps as steps_mod
+
+
+def run():
+    for arch in ("llama3_2_1b", "falcon_mamba_7b", "mixtral_8x22b"):
+        cfg = scaled_config(arch, "smoke")
+        model = build_model(cfg)
+        pcfg, tcfg = ParallelConfig(), TrainConfig()
+        step = jax.jit(steps_mod.make_train_step(model, pcfg, tcfg),
+                       donate_argnums=(0,))
+        state = steps_mod.init_train_state(model, jax.random.key(0), pcfg)
+        b, s = 4, 64
+        batch = {"tokens": jnp.zeros((b, s), jnp.int32),
+                 "labels": jnp.zeros((b, s), jnp.int32)}
+
+        state2 = state
+
+        def call():
+            nonlocal state2
+            state2, m = step(state2, batch)
+            jax.block_until_ready(m["loss"])
+
+        t = timeit(call, repeats=3, warmup=2)
+        emit(f"train_step/{arch}/smoke/b{b}s{s}", t,
+             f"{b * s / t:.0f}tok/s(cpu)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived = the
+figure-relevant quantity: bandwidth, speedup, roofline term, ...).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+def main() -> None:
+    from benchmarks import (bench_fig6_startup, bench_fig7_storage,
+                            bench_fig8_profiles, bench_fig9_kmeans,
+                            bench_kernels, bench_roofline, bench_train_step)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
+                bench_fig9_kmeans, bench_kernels, bench_train_step,
+                bench_roofline):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{mod.__name__},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's §4.3 experiment: KMeans over Pilot-Data Memory backends.
+
+    PYTHONPATH=src python examples/kmeans_pilot.py [--scenario i|ii|iii]
+
+Runs Lloyd's KMeans with the points DataUnit held in each storage tier:
+file (throttled to the paper's Stampede-disk profile — SIMULATED), host
+(the Redis analogue) and device/HBM (the Spark analogue), and reports the
+per-iteration times + speedups. See benchmarks/bench_fig9_kmeans.py for the
+full Fig. 9 sweep.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import (ComputeDataManager, DataUnit, PilotComputeDescription,
+                        PilotComputeService, kmeans, make_backend, make_blobs)
+from repro.core.analytics import PAPER_SCENARIOS
+from repro.core.memory import PROFILES, FileBackend
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="ii", choices=list(PAPER_SCENARIOS))
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--dim", type=int, default=8)
+    args = ap.parse_args()
+    n, k = PAPER_SCENARIOS[args.scenario]
+    print(f"scenario ({args.scenario}): {n} points x {k} clusters")
+    pts, _ = make_blobs(n, min(k, 256), d=args.dim)
+
+    svc = PilotComputeService()
+    pilot = svc.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    manager = ComputeDataManager(svc)
+    backends = {"file": FileBackend("/tmp/kmeans_pilot",
+                                    PROFILES["stampede_disk"]),
+                "host": make_backend("host"),
+                "device": make_backend("device")}
+    base = None
+    for tier in ("file", "host", "device"):
+        du = DataUnit.from_array(f"pts-{tier}", pts, 4, backends, tier=tier)
+        res = kmeans(du, k=k, iters=args.iters,
+                     manager=None if tier == "device" else manager,
+                     pilot=pilot if tier == "device" else None)
+        per = float(np.mean(res.iter_seconds))
+        base = base or per
+        print(f"  tier={tier:7s} {per*1e3:8.1f} ms/iter  "
+              f"speedup={base/per:5.2f}x  sse={res.sse_history[-1]:.0f}")
+        du.delete()
+    svc.cancel_all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched serving with continuous batching on a pilot-retained mesh.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch yi_9b]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--preset", default="smoke")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--preset", args.preset,
+                "--requests", "16", "--batch", "4", "--prompt-len", "16",
+                "--gen", "32", "--max-len", "128"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Pilot-API: the paper's unified abstraction, TPU-native.
+
+    from repro.core import (PilotComputeService, PilotComputeDescription,
+                            ComputeDataManager, DataUnit, make_backend)
+
+    svc = PilotComputeService()
+    pilot = svc.submit_pilot(PilotComputeDescription(backend="inprocess",
+                                                     num_devices=1))
+    manager = ComputeDataManager(svc)
+    du = DataUnit.from_array("pts", points, 8, backends, tier="device")
+    cu = manager.run(my_fn, input_data=(du,))
+    cu.result()
+"""
+from repro.core.analytics import KMeansResult, assign_partial, kmeans, make_blobs
+from repro.core.data import DataUnit, DataUnitDescription
+from repro.core.manager import ComputeDataManager, PilotComputeService
+from repro.core.mapreduce import map_reduce
+from repro.core.memory import (PROFILES, TIERS, TierProfile, make_backend)
+from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
+                              PilotCompute, PilotComputeDescription, State)
+
+__all__ = [
+    "DataUnit", "DataUnitDescription", "ComputeDataManager",
+    "PilotComputeService", "map_reduce", "PROFILES", "TIERS", "TierProfile",
+    "make_backend", "ComputeUnit", "ComputeUnitDescription", "PilotCompute",
+    "PilotComputeDescription", "State", "kmeans", "KMeansResult",
+    "assign_partial", "make_blobs",
+]

@@ -1,0 +1,6 @@
+from repro.core.backends.base import ComputeBackend, get_backend
+from repro.core.backends.inprocess import InProcessBackend
+from repro.core.backends.simulated import SimulatedClusterBackend
+
+__all__ = ["ComputeBackend", "get_backend", "InProcessBackend",
+           "SimulatedClusterBackend"]

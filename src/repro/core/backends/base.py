@@ -1,0 +1,36 @@
+"""Backend adaptors: the paper's YARN/Mesos/SAGA adaptor layer.
+
+Each adaptor knows how to *provision* a PilotCompute on its substrate.
+The paper's point is that the Pilot-API stays identical across them.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.pilot import PilotCompute, PilotComputeDescription
+
+_REGISTRY: Dict[str, "ComputeBackend"] = {}
+
+
+class ComputeBackend:
+    name: str = "base"
+
+    def provision(self, desc: PilotComputeDescription) -> PilotCompute:
+        raise NotImplementedError
+
+    def release(self, pilot: PilotCompute) -> None:
+        pilot.cancel()
+
+
+def register_backend(backend: ComputeBackend):
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> ComputeBackend:
+    if name not in _REGISTRY:
+        # late import side-effect registration
+        from repro.core.backends import inprocess, simulated  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]

@@ -1,0 +1,65 @@
+"""In-process backend: pilots own a slice of the local jax devices.
+
+This is the 'HPC' adaptor of the paper: the resource manager (here: the
+process's device set) hands the pilot a static allocation; the pilot then
+multiplexes CUs itself (multi-level scheduling). Device slices are leased so
+two pilots never share a chip unless oversubscription is requested.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.backends.base import ComputeBackend, register_backend
+from repro.core.pilot import PilotCompute, PilotComputeDescription
+from repro.launch.mesh import make_mesh
+
+
+class InProcessBackend(ComputeBackend):
+    name = "inprocess"
+
+    def __init__(self, oversubscribe: bool = True):
+        self._lock = threading.Lock()
+        self._leased: set = set()
+        self.oversubscribe = oversubscribe
+
+    def _lease(self, n: int) -> List:
+        devs = jax.devices()
+        with self._lock:
+            free = [d for d in devs if d.id not in self._leased]
+            if len(free) < n:
+                if not self.oversubscribe:
+                    raise RuntimeError(
+                        f"backend has {len(free)} free devices, need {n}")
+                free = devs
+            take = free[:n]
+            self._leased.update(d.id for d in take)
+            return take
+
+    def provision(self, desc: PilotComputeDescription) -> PilotCompute:
+        t0 = time.time()
+        n = max(1, min(desc.num_devices, jax.device_count()))
+        devices = self._lease(n)
+        shape = desc.mesh_shape or (len(devices),)
+        axes = desc.mesh_axes[:len(shape)] or ("data",)
+        mesh = jax.sharding.Mesh(
+            np.array(devices).reshape(shape), axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        pilot = PilotCompute(desc, mesh)
+        pilot.start()
+        pilot.provision_time = time.time() - t0
+        return pilot
+
+    def release(self, pilot: PilotCompute) -> None:
+        super().release(pilot)
+        if pilot.mesh is not None:
+            with self._lock:
+                self._leased.difference_update(
+                    d.id for d in pilot.mesh.devices.flat)
+
+
+register_backend(InProcessBackend())

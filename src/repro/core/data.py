@@ -1,0 +1,128 @@
+"""Data-Units: named, partitioned datasets with affinity + tier placement.
+
+Paper §3: "A Data-Unit represents a self-contained, related set of data";
+Pilot-Data manages DUs across heterogeneous storage, ensures availability
+before a Compute-Unit starts, and exposes *affinity labels* so the scheduler
+can co-locate compute with data. Here a DU's partitions live in exactly one
+tier at a time (file/object/host/device) and can be moved (staged) between
+tiers explicitly or by the ComputeDataManager's late-binding placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import uuid
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.memory import StorageBackend, TIERS
+
+
+@dataclasses.dataclass(frozen=True)
+class DataUnitDescription:
+    name: str
+    affinity: str = ""              # label, e.g. "pilot-0" / "us-east"
+    preferred_tier: str = "file"
+
+
+class DataUnit:
+    """A partitioned dataset resident in one storage tier."""
+
+    def __init__(self, description: DataUnitDescription,
+                 backends: Dict[str, StorageBackend],
+                 num_partitions: int = 0):
+        self.description = description
+        self.name = description.name or f"du-{uuid.uuid4().hex[:8]}"
+        self.backends = backends
+        self.num_partitions = num_partitions
+        self.tier: str = description.preferred_tier
+        self._lock = threading.Lock()
+        self.transfer_log: List[dict] = []   # telemetry for benchmarks
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_partitions(cls, name: str, parts: Sequence[np.ndarray],
+                        backends: Dict[str, StorageBackend],
+                        tier: str = "host", affinity: str = "") -> "DataUnit":
+        du = cls(DataUnitDescription(name, affinity, tier), backends,
+                 num_partitions=len(parts))
+        be = du._backend(tier)
+        for i, p in enumerate(parts):
+            be.put(du._key(i), np.asarray(p))
+        du.tier = tier
+        return du
+
+    @classmethod
+    def from_array(cls, name: str, arr: np.ndarray, num_partitions: int,
+                   backends: Dict[str, StorageBackend], tier: str = "host",
+                   affinity: str = "") -> "DataUnit":
+        parts = np.array_split(np.asarray(arr), num_partitions, axis=0)
+        return cls.from_partitions(name, parts, backends, tier, affinity)
+
+    # ------------------------------------------------------------------
+    def _key(self, i: int) -> str:
+        return f"{self.name}/part{i:05d}"
+
+    def _backend(self, tier: str) -> StorageBackend:
+        if tier not in self.backends:
+            raise KeyError(f"DataUnit {self.name}: no backend for tier {tier!r}"
+                           f" (have {sorted(self.backends)})")
+        return self.backends[tier]
+
+    @property
+    def affinity(self) -> str:
+        return self.description.affinity
+
+    def partition(self, i: int) -> np.ndarray:
+        return self._backend(self.tier).get(self._key(i))
+
+    def partition_device(self, i: int) -> jax.Array:
+        be = self._backend(self.tier)
+        if hasattr(be, "get_device"):
+            return be.get_device(self._key(i))
+        return jax.device_put(be.get(self._key(i)))
+
+    def partitions(self) -> Iterable[np.ndarray]:
+        for i in range(self.num_partitions):
+            yield self.partition(i)
+
+    def nbytes(self) -> int:
+        be = self._backend(self.tier)
+        return sum(be.nbytes(self._key(i)) for i in range(self.num_partitions))
+
+    # ------------------------------------------------------------------
+    def to_tier(self, tier: str, delete_source: bool = True) -> "DataUnit":
+        """Stage every partition into another tier (paper: stage-in/out)."""
+        if tier == self.tier:
+            return self
+        src, dst = self._backend(self.tier), self._backend(tier)
+        t0 = time.time()
+        moved = 0
+        with self._lock:
+            for i in range(self.num_partitions):
+                arr = src.get(self._key(i))
+                dst.put(self._key(i), arr)
+                moved += int(np.asarray(arr).nbytes)
+                if delete_source:
+                    src.delete(self._key(i))
+            old = self.tier
+            self.tier = tier
+        self.transfer_log.append({
+            "from": old, "to": tier, "bytes": moved,
+            "seconds": time.time() - t0})
+        return self
+
+    def replicate_to(self, tier: str) -> "DataUnit":
+        return self.to_tier(tier, delete_source=False)
+
+    def delete(self) -> None:
+        be = self._backend(self.tier)
+        for i in range(self.num_partitions):
+            be.delete(self._key(i))
+
+    def __repr__(self) -> str:
+        return (f"DataUnit({self.name!r}, parts={self.num_partitions}, "
+                f"tier={self.tier!r}, affinity={self.affinity!r})")

@@ -1,0 +1,137 @@
+"""Compute-Data-Manager: data-aware, late-binding CU scheduling over pilots.
+
+Paper §3.3 / Fig. 5: "The Compute-Data-Manager will assign submitted
+Compute-Units and Data-Units to a Pilot taking into account the current
+available Pilots, their utilization and data locality."
+
+TPU adaptation of locality: the expensive boundaries are host<->HBM staging
+and cross-slice transfers, so the score prefers (1) the pilot whose DEVICE
+tier already holds the CU's DataUnits, then (2) matching affinity labels,
+then (3) host-resident data, then (4) lowest queue depth. Late binding: CUs
+wait in the manager queue until some pilot is provisioned and healthy.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.backends.base import get_backend
+from repro.core.data import DataUnit
+from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
+                              PilotCompute, PilotComputeDescription, State)
+
+# locality score weights (device residency dominates, as HBM>host>disk)
+W_DEVICE, W_AFFINITY, W_HOST, W_QUEUE = 100.0, 10.0, 5.0, 1.0
+
+
+class PilotComputeService:
+    """Provision/release pilots across backend adaptors (paper's PCS)."""
+
+    def __init__(self):
+        self.pilots: Dict[str, PilotCompute] = {}
+        self._lock = threading.Lock()
+
+    def submit_pilot(self, desc: PilotComputeDescription) -> PilotCompute:
+        backend = get_backend(desc.backend)
+        pilot = backend.provision(desc)
+        with self._lock:
+            self.pilots[pilot.id] = pilot
+        return pilot
+
+    def release(self, pilot: PilotCompute):
+        backend = get_backend(pilot.desc.backend)
+        backend.release(pilot)
+        with self._lock:
+            self.pilots.pop(pilot.id, None)
+
+    def cancel_all(self):
+        for p in list(self.pilots.values()):
+            self.release(p)
+
+    def healthy_pilots(self) -> List[PilotCompute]:
+        with self._lock:
+            return [p for p in self.pilots.values()
+                    if p.state == State.RUNNING]
+
+
+class ComputeDataManager:
+    """Late-binding scheduler: scores (pilot x CU) by data locality."""
+
+    def __init__(self, service: PilotComputeService):
+        self.service = service
+        self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _device_tier_hits(self, pilot: PilotCompute,
+                          dus: Sequence[DataUnit]) -> int:
+        hits = 0
+        for du in dus:
+            if du.tier != "device":
+                continue
+            be = du.backends.get("device")
+            mesh = getattr(be, "mesh", None)
+            if mesh is None or pilot.mesh is None:
+                hits += 1  # device-resident, single address space
+            else:
+                pilot_devs = {d.id for d in pilot.mesh.devices.flat}
+                du_devs = {d.id for d in mesh.devices.flat}
+                if du_devs & pilot_devs:
+                    hits += 1
+        return hits
+
+    def score(self, pilot: PilotCompute, cu_desc: ComputeUnitDescription) -> float:
+        dus = list(cu_desc.input_data)
+        s = W_DEVICE * self._device_tier_hits(pilot, dus)
+        if cu_desc.affinity and cu_desc.affinity == pilot.desc.affinity:
+            s += W_AFFINITY
+        s += W_HOST * sum(1 for du in dus if du.tier == "host")
+        s -= W_QUEUE * pilot.utilization
+        return s
+
+    def select_pilot(self, cu_desc: ComputeUnitDescription,
+                     timeout: float = 30.0,
+                     exclude: frozenset = frozenset()) -> PilotCompute:
+        t0 = time.time()
+        while True:
+            pilots = [p for p in self.service.healthy_pilots()
+                      if p.id not in exclude]
+            if pilots:
+                return max(pilots, key=lambda p: self.score(p, cu_desc))
+            if time.time() - t0 > timeout:
+                raise TimeoutError("no healthy pilot available (late binding "
+                                   "timed out)")
+            time.sleep(0.01)
+
+    # ------------------------------------------------------------------
+    def submit(self, cu_desc: ComputeUnitDescription,
+               exclude: frozenset = frozenset()) -> ComputeUnit:
+        cu = ComputeUnit(cu_desc)
+        pilot = self.select_pilot(cu_desc, exclude=exclude)
+        self.history.append({"cu": cu.id, "pilot": pilot.id,
+                             "score": self.score(pilot, cu_desc),
+                             "t": time.time()})
+        pilot.submit_cu(cu)
+        return cu
+
+    def run(self, fn, *args, input_data=(), affinity: str = "", **kwargs):
+        """Convenience: submit and return the CU."""
+        return self.submit(ComputeUnitDescription(
+            fn=fn, args=args, kwargs=kwargs, input_data=input_data,
+            affinity=affinity))
+
+    def result_with_retry(self, cu_desc: ComputeUnitDescription,
+                          retries: int = 2,
+                          timeout: Optional[float] = None):
+        """Run a CU to completion, transparently resubmitting on CU/pilot
+        failure (task-level fault tolerance; pilot-level recovery lives in
+        repro.runtime.fault_tolerance). Each retry re-runs late binding, so a
+        CU whose pilot died lands on a surviving pilot."""
+        last: Optional[Exception] = None
+        for _ in range(retries + 1):
+            cu = self.submit(cu_desc)
+            try:
+                return cu.future.result(timeout)
+            except Exception as e:  # noqa: BLE001
+                last = e
+        raise last

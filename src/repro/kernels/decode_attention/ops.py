@@ -1,0 +1,28 @@
+"""Dispatch wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention_op(q, k_cache, v_cache, cache_pos, positions, *,
+                        window: int = 0, impl: str = "auto",
+                        block_k: int = 512):
+    """impl: auto | pallas | interpret | ref"""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, cache_pos, positions,
+                                    window=window)
+    sc = k_cache.shape[1]
+    while sc % block_k:
+        block_k //= 2
+    return decode_attention(q, k_cache, v_cache, cache_pos, positions,
+                            window=window, block_k=max(block_k, 1),
+                            interpret=(impl == "interpret"))

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for single-token decode attention against a positional
+KV cache (the layout used by repro.models.attention.gqa_decode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cache_pos: jax.Array, positions: jax.Array,
+                         window: int = 0) -> jax.Array:
+    """q (B,Nq,H); k/v_cache (B,Sc,Nkv,H); cache_pos (B,Sc) int32 (absolute
+    position stored in each slot, -1 = empty); positions (B,) current pos.
+    Returns (B,Nq,H)."""
+    b, nq, h = q.shape
+    nkv = k_cache.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, nkv, g, h)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (h ** -0.5)
+    rel = positions[:, None] - cache_pos                      # (B,Sc)
+    valid = (cache_pos >= 0) & (rel >= 0)
+    if window:
+        valid &= rel < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, nq, h).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Dispatch wrapper for flash attention: backend + block-size selection."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       impl: str = "auto", block_q: int = 256,
+                       block_k: int = 256):
+    """impl: auto | pallas | interpret | ref"""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    sq, skv = q.shape[1], k.shape[1]
+    while sq % block_q:
+        block_q //= 2
+    while skv % block_k:
+        block_k //= 2
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=max(block_q, 1), block_k=max(block_k, 1),
+                           interpret=(impl == "interpret"))

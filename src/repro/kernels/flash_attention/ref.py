@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for causal/windowed GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q (B,Sq,Nq,H); k,v (B,Skv,Nkv,H); Nq % Nkv == 0. Self-attention
+    positions (q row i attends kv cols <= i)."""
+    b, sq, nq, h = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, sq, nkv, g, h)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (h ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    rel = qpos - kpos
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= rel >= 0
+    if window:
+        mask &= rel < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, nq, h).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the KMeans assignment/partial-sum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(points: jax.Array, centroids: jax.Array):
+    """points (N,D), centroids (K,D) -> (sums (K,D), counts (K,), sse ()).
+
+    Matmul form of squared distance; fp32 accumulation.
+    """
+    x = points.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    d2 = x2 - 2.0 * (x @ c.T) + c2
+    idx = jnp.argmin(d2, axis=1)
+    one_hot = jax.nn.one_hot(idx, c.shape[0], dtype=jnp.float32)
+    sums = one_hot.T @ x
+    counts = one_hot.sum(axis=0)
+    sse = jnp.sum(jnp.take_along_axis(d2, idx[:, None], axis=1))
+    return sums, counts, sse

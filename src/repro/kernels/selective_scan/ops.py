@@ -1,0 +1,28 @@
+"""Dispatch wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.selective_scan.selective_scan import selective_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def selective_scan_op(x, dt, a, b_ssm, c_ssm, d_skip, *, impl: str = "auto",
+                      block_d: int = 512, chunk: int = 256):
+    """impl: auto | pallas | interpret | ref"""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return selective_scan_ref(x, dt, a, b_ssm, c_ssm, d_skip)
+    di, s = x.shape[2], x.shape[1]
+    while di % block_d:
+        block_d //= 2
+    while s % chunk:
+        chunk //= 2
+    return selective_scan(x, dt, a, b_ssm, c_ssm, d_skip,
+                          block_d=max(block_d, 1), chunk=max(chunk, 1),
+                          interpret=(impl == "interpret"))

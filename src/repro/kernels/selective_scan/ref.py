@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+                       b_ssm: jax.Array, c_ssm: jax.Array, d_skip: jax.Array,
+                       h0: jax.Array | None = None):
+    """x, dt (B,S,Di); a (Di,N); b_ssm, c_ssm (B,S,N); d_skip (Di,).
+    Returns (y (B,S,Di), h_end (B,Di,N)). Plain sequential scan, fp32."""
+    bsz, s, di = x.shape
+    n = a.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_ssm.astype(jnp.float32)
+    cf = c_ssm.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs
+        da = jnp.exp(dtt[..., None] * a[None])           # (B,Di,N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    h_end, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xf * d_skip
+    return y.astype(x.dtype), h_end

@@ -1,0 +1,115 @@
+"""Autotuner: sweep sharding-rule / parallel-config variants for a cell and
+pick the best by roofline step time (subject to the HBM fit constraint).
+
+    python -m repro.launch.autotune --arch yi_9b --shape train_4k
+    python -m repro.launch.autotune --arch deepseek_v3_671b --shape decode_32k
+
+This mechanizes the §Perf loop's outer search: the candidate set encodes
+the levers that won during manual hillclimbing (EP layouts, microbatching,
+optimizer dtype, sequence parallelism), and the tuner evaluates each by
+lower+compile+roofline, never touching real devices. Winners are written to
+experiments/autotune/<arch>__<shape>__<mesh>.json for launchers to consume.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, SHAPES
+from repro.launch.dryrun import run_cell
+from repro.parallel.sharding import AxisRules
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "autotune"
+
+EP2D = (("expert", ("model", "data")), ("act_expert2", ("model", "data")),
+        ("expert_embed", None), ("moe_group2", None))
+EP2D_POD = EP2D[:-1] + (("moe_group2", "pod"),)
+SP = (("seq", "model"),)
+
+
+def candidates(cfg, shape, multi_pod: bool):
+    """(name, rule-overrides, pcfg) candidates appropriate for the cell."""
+    cands = [("default", (), ParallelConfig())]
+    if shape.kind == "train":
+        for mu in (4, 8):
+            # microbatches must keep per-shard batch >= 1
+            if shape.global_batch % mu == 0:
+                cands.append((f"micro{mu}", (),
+                              ParallelConfig(microbatches=mu)))
+        cands.append(("micro8+optbf16", (),
+                      ParallelConfig(microbatches=8,
+                                     opt_state_dtype="bfloat16")))
+    if shape.kind == "prefill":
+        cands.append(("seq_parallel", SP, ParallelConfig()))
+    if cfg.is_moe and cfg.moe.num_experts >= 64:
+        ep = EP2D_POD if multi_pod else EP2D
+        cands.append(("ep2d", ep, ParallelConfig()))
+        if shape.kind == "train":
+            cands.append(("ep2d+micro8+optbf16", ep,
+                          ParallelConfig(microbatches=8,
+                                         opt_state_dtype="bfloat16")))
+    return cands
+
+
+def step_time(rec) -> float:
+    r = rec["roofline"]
+    return max(r["t_compute"], r["t_memory"], r["t_collective"])
+
+
+def tune(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    results = []
+    for name, rule_over, pcfg in candidates(cfg, shape, multi_pod):
+        rules = AxisRules()
+        for ln, ax in rule_over:
+            rules = rules.replacing(ln, ax)
+        rec = run_cell(arch, shape_name, multi_pod, OUT_DIR, rules=rules,
+                       pcfg=pcfg, tag=f"autotune:{name}")
+        if rec.get("status") != "ok":
+            print(f"  [{name}] {rec.get('status')}", flush=True)
+            continue
+        results.append((name, rec))
+        r = rec["roofline"]
+        print(f"  [{name}] step={step_time(rec):.3f}s "
+              f"peak={r['peak_mem_bytes']/2**30:.1f}GiB "
+              f"bneck={r['bottleneck']}", flush=True)
+    if not results:
+        raise RuntimeError("no candidate compiled")
+    # prefer fitting HBM, then minimize step time
+    results.sort(key=lambda nr: (not nr[1]["fits_hbm"], step_time(nr[1])))
+    best_name, best = results[0]
+    summary = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "best": best_name,
+        "best_step_s": step_time(best),
+        "best_peak_gib": best["roofline"]["peak_mem_bytes"] / 2**30,
+        "candidates": {n: {"step_s": step_time(r),
+                           "peak_gib": r["roofline"]["peak_mem_bytes"] / 2**30,
+                           "fits_hbm": r["fits_hbm"]}
+                       for n, r in results},
+    }
+    out = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+    out.write_text(json.dumps(summary, indent=2))
+    print(f"[autotune] best for {arch}/{shape_name}@{mesh_name}: {best_name} "
+          f"(step {summary['best_step_s']:.3f}s, "
+          f"peak {summary['best_peak_gib']:.1f}GiB)")
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args()
+    tune(args.arch, args.shape, args.multipod)
+
+
+if __name__ == "__main__":
+    main()

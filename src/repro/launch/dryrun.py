@@ -1,0 +1,207 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set XLA_FLAGS before any jax import: jax locks the device count at
+first initialization. Only the dry-run sees 512 placeholder host devices.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ParallelConfig, SHAPES, TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import abstract_params, param_pspecs
+from repro.models.model import build_model
+from repro.parallel.sharding import AxisRules, sharding_context
+from repro.roofline import analysis as ra
+from repro.train import steps as steps_mod
+from repro.train.steps import TrainState
+from repro.optim.adamw import OptState
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return ("full-attention arch: 512k dense-KV decode is not serveable; "
+                "skipped per DESIGN.md §Arch-applicability")
+    return None
+
+
+def build_lowerable(cfg, shape, mesh, rules: AxisRules, pcfg: ParallelConfig):
+    """Returns (jitted_fn, example_args) ready for .lower()."""
+    model = build_model(cfg)
+    params_sds = abstract_params(model.specs)
+    params_ps = param_pspecs(model.specs, mesh, rules)
+    ns = lambda tree: jax.tree.map(lambda p: NamedSharding(mesh, p), tree)
+    batch_sds, batch_ps = steps_mod.batch_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+        step = steps_mod.make_train_step(model, pcfg, tcfg)
+        if pcfg.opt_state_dtype == "bfloat16":
+            mv = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+                              params_sds)
+        else:
+            mv = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                              params_sds)
+        opt_sds = OptState(m=mv, v=jax.tree.map(lambda x: x, mv),
+                           count=jax.ShapeDtypeStruct((), jnp.int32))
+        opt_ps = OptState(m=params_ps, v=jax.tree.map(lambda x: x, params_ps),
+                          count=P())
+        state_sds = TrainState(params_sds, opt_sds)
+        state_ps = TrainState(ns(params_ps), ns(opt_ps))
+
+        def fn(state, batch):
+            with sharding_context(mesh, rules):
+                return step(state, batch)
+
+        jitted = jax.jit(fn, in_shardings=(state_ps, ns(batch_ps)),
+                         donate_argnums=(0,))
+        return jitted, (state_sds, batch_sds)
+
+    if shape.kind == "prefill":
+        step = steps_mod.make_prefill_step(model, max_len=shape.seq_len)
+
+        def fn(params, batch):
+            with sharding_context(mesh, rules):
+                return step(params, batch)
+
+        jitted = jax.jit(fn, in_shardings=(ns(params_ps), ns(batch_ps)))
+        return jitted, (params_sds, batch_sds)
+
+    # decode
+    step = steps_mod.make_decode_step(model)
+    cache_sds, cache_ps = steps_mod.cache_specs(model, shape, mesh, rules)
+
+    def fn(params, cache, tokens, positions):
+        with sharding_context(mesh, rules):
+            return step(params, cache, tokens, positions)
+
+    jitted = jax.jit(fn, in_shardings=(ns(params_ps), ns(cache_ps),
+                                       ns(batch_ps["tokens"]),
+                                       ns(batch_ps["positions"])),
+                     donate_argnums=(1,))
+    return jitted, (params_sds, cache_sds, batch_sds["tokens"],
+                    batch_sds["positions"])
+
+
+def apply_cfg_patch(cfg, patch: dict):
+    """Apply {"field": v, "sub.field": v} overrides to a frozen config."""
+    import dataclasses
+    nested: dict = {}
+    flat: dict = {}
+    for key, val in patch.items():
+        if "." in key:
+            sub, field = key.split(".", 1)
+            nested.setdefault(sub, {})[field] = val
+        else:
+            flat[key] = val
+    for sub, fields in nested.items():
+        flat[sub] = dataclasses.replace(getattr(cfg, sub), **fields)
+    return dataclasses.replace(cfg, **flat)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             rules: AxisRules | None = None,
+             pcfg: ParallelConfig | None = None, tag: str = "",
+             cfg_patch: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if cfg_patch:
+        cfg = apply_cfg_patch(cfg, cfg_patch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "tag": tag}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    pcfg = pcfg or ParallelConfig()
+    rules = rules or AxisRules()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    jitted, args = build_lowerable(cfg, shape, mesh, rules, pcfg)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    roof = ra.analyze(compiled, hlo, arch=arch, shape=shape_name,
+                      mesh_name=mesh_name, chips=chips,
+                      model_flops=ra.model_flops_estimate(cfg, shape))
+    rec.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1),
+               memory_analysis=repr(mem), roofline=roof.to_dict())
+    rec["fits_hbm"] = bool(roof.peak_mem_bytes <= ra.HBM_PER_CHIP)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    print(f"[cached] {arch} {shape_name} {mesh_name}: "
+                          f"{rec.get('status')}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod, out_dir)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                path.write_text(json.dumps(rec, indent=2, default=str))
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" t_c={r['t_compute']:.3e}s t_m={r['t_memory']:.3e}s"
+                             f" t_coll={r['t_collective']:.3e}s"
+                             f" bottleneck={r['bottleneck']}"
+                             f" peak_mem={r['peak_mem_bytes']/2**30:.2f}GiB"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status}] {arch} {shape_name} {mesh_name}{extra}",
+                      flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

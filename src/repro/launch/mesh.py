@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Functions, not module-level constants, so importing never touches jax device
+state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+*before* any jax import (see launch/dryrun.py); smoke tests and benchmarks
+see the real (single) device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1) -> Mesh:
+    """Best-effort mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return make_mesh((n // mp, mp), ("data", "model"))
+
+
+def host_device_grid(mesh: Mesh) -> dict:
+    """Telemetry: devices per axis (for launch scripts / logs)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,146 @@
+"""Parameter-spec machinery + shared layer math (norms, RoPE, losses).
+
+Models are pure-functional: ``*_specs(cfg)`` returns a pytree of ParamSpec
+(shape + logical axes + initializer); ``init_params`` materializes it,
+``abstract_params`` gives ShapeDtypeStructs for allocation-free lowering, and
+``param_pspecs`` resolves PartitionSpecs through the AxisRules table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import AxisRules, resolve_pspec, with_logical_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled | mamba_a | mamba_dt
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def stack_specs(tree, num: int, logical: str = "layers"):
+    """Prepend a stacked (scan) dimension to every spec in the tree."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(
+            s, shape=(num,) + s.shape, logical=(logical,) + s.logical)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _init_leaf(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "mamba_a":
+        # A_log init: log of 1..N broadcast over d_inner  (shape (..., d, N))
+        n = spec.shape[-1]
+        a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), spec.shape[:-1] + (1,))
+        return jnp.log(a).astype(spec.dtype)
+    if spec.init == "mamba_dt":
+        # dt bias: inverse-softplus of uniform in [1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(spec.dtype)
+    scale = spec.scale
+    if spec.init == "scaled":  # 1/sqrt(fan_in)
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+        scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_params(key, spec_tree):
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(k, s) for k, s in zip(keys, leaves)])
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_pspecs(spec_tree, mesh, rules: AxisRules):
+    return jax.tree.map(
+        lambda s: resolve_pspec(s.logical, s.shape, mesh, rules),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(spec_tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)))
+
+
+# ---------------------------------------------------------------------------
+# Shared math
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = with_logical_constraint(h, "batch", "seq", "act_mlp")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def dense_ffn(x: jax.Array, ffn_params, act: str = "swiglu") -> jax.Array:
+    """Dense FFN: 3-matrix SwiGLU or 2-matrix GELU (starcoder2/whisper)."""
+    if act == "swiglu":
+        return swiglu(x, ffn_params["w_gate"], ffn_params["w_up"],
+                      ffn_params["w_down"])
+    u = jnp.einsum("...d,df->...f", x, ffn_params["w_up"])
+    h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    h = with_logical_constraint(h, "batch", "seq", "act_mlp")
+    return jnp.einsum("...f,fd->...d", h, ffn_params["w_down"])
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None,
+                       z_loss: float = 0.0):
+    """logits (B,S,V) [bf16 ok], labels (B,S) int32. fp32 log-sum-exp."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = float(np.prod(labels.shape))
+    return nll.sum() / denom

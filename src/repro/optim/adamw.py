@@ -1,0 +1,94 @@
+"""AdamW with ZeRO-style sharded state and configurable state dtype.
+
+State dtypes: float32 (default), bfloat16, or int8 (blockwise-quantized m/v,
+8-bit-Adam style). Optimizer state inherits each parameter's PartitionSpec —
+combined with the FSDP "embed"->data rule this is ZeRO-1: every data shard
+owns 1/|data| of m/v. All math runs in fp32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.quant import (LogQTensor, QTensor, dequantize,
+                               dequantize_log, quantize, quantize_log)
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def _store(x: jax.Array, dtype: str, second_moment: bool = False):
+    if dtype == "int8":
+        # m: signed symmetric int8; v: log-domain uint8 (v spans many orders
+        # of magnitude inside one block — linear int8 zeroes small entries
+        # and explodes 1/sqrt(v); log-domain bounds the multiplicative error)
+        return quantize_log(x) if second_moment else quantize(x)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _load(x) -> jax.Array:
+    if isinstance(x, LogQTensor):
+        return dequantize_log(x)
+    if isinstance(x, QTensor):
+        return dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def adamw_init(params, state_dtype: str = "float32") -> OptState:
+    zm = lambda p: _store(jnp.zeros(p.shape, jnp.float32), state_dtype)
+    zv = lambda p: _store(jnp.zeros(p.shape, jnp.float32), state_dtype,
+                          second_moment=True)
+    return OptState(
+        m=jax.tree.map(zm, params),
+        v=jax.tree.map(zv, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(grads, opt_state: OptState, params, lr: jax.Array,
+                 cfg: TrainConfig, state_dtype: str = "float32"):
+    count = opt_state.count + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    # global-norm clip (fp32)
+    if cfg.grad_clip:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    else:
+        gnorm = jnp.float32(0.0)
+        scale = jnp.float32(1.0)
+
+    def upd(g, m_q, v_q, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * _load(m_q) + (1 - b1) * g
+        v = b2 * _load(v_q) + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        step = mhat / (jnp.sqrt(vhat) + 1e-8)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/biases
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return (new_p, _store(m, state_dtype),
+                _store(v, state_dtype, second_moment=True))
+
+    is_q = lambda x: isinstance(x, QTensor)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state.m)
+    flat_v = treedef.flatten_up_to(opt_state.v)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, count), gnorm

@@ -1,0 +1,72 @@
+"""Gradient compression for the low-bandwidth (inter-pod) reduction.
+
+Error-feedback int8 allreduce (1-bit-Adam / EF-SGD family): each pod
+quantizes (grad + residual) to blockwise int8, exchanges the int8 payload
+with an all_gather over the pod axis (8x fewer wire bytes than an fp32
+ring all-reduce at pod count 2), dequantizes + averages locally, and keeps
+the quantization error as residual for the next step — unbiased in the
+long run, bounded staleness.
+
+Implemented with jax.shard_map manual over the pod axis only; the data and
+model axes stay auto-sharded inside, so this composes with the train step's
+pjit sharding untouched.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim.quant import QTensor, dequantize, quantize
+
+
+def _compress_leaf(g: jax.Array, residual: jax.Array, axis: str,
+                   block: int = 256):
+    gf = g.astype(jnp.float32) + residual
+    q = quantize(gf, block)
+    deq = dequantize(q)
+    new_residual = gf - deq
+    # exchange int8 payload + scales across the pod axis
+    data_all = jax.lax.all_gather(q.data, axis)        # (P, nb, blk) int8
+    scale_all = jax.lax.all_gather(q.scale, axis)      # (P, nb, 1)
+    p = data_all.shape[0]
+    summed = jnp.sum(data_all.astype(jnp.float32) * scale_all, axis=0) / p
+    flat = summed.reshape(-1)
+    n = 1
+    for s in q.shape:
+        n *= s
+    mean_g = flat[:n].reshape(q.shape)
+    return mean_g.astype(g.dtype), new_residual
+
+
+def compressed_pod_mean(grads, residuals, mesh: Mesh, axis: str = "pod",
+                        block: int = 256):
+    """Tree-wise EF-int8 mean over `axis`. grads already reduced over data
+    (per-pod view); residuals: same-shape fp32 tree (carried in TrainState).
+    Returns (mean_grads, new_residuals)."""
+    if axis not in mesh.axis_names:
+        return grads, residuals
+
+    def prog(g_tree, r_tree):
+        out = jax.tree.map(
+            functools.partial(_compress_leaf, axis=axis, block=block),
+            g_tree, r_tree)
+        gs = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        rs = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return gs, rs
+
+    # manual over the pod axis only; data/model stay auto-sharded inside
+    manual = jax.shard_map(
+        prog, mesh=mesh, axis_names=frozenset({axis}),
+        in_specs=(P(), P()), out_specs=(P(), P()),
+        check_vma=False)
+    return manual(grads, residuals)
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

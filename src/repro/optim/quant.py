@@ -1,0 +1,96 @@
+"""Blockwise int8 quantization for optimizer state / gradient compression.
+
+Symmetric per-block scaling (block = flat groups of ``block_size``), the
+layout 8-bit optimizers use in public literature (Dettmers et al.,
+arXiv:2110.02861). Scales are float32; amortized cost ≈ 8 + 32/block bits
+per element. QTensor is a registered pytree whose original shape is static
+aux-data, so it passes through jit/scan/pjit transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    data: jax.Array          # int8 (n_blocks, block)
+    scale: jax.Array         # float32 (n_blocks, 1)
+    shape: Tuple[int, ...]   # original shape (static aux)
+
+    def tree_flatten(self):
+        return (self.data, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+
+def quantize(x: jax.Array, block_size: int = 256) -> QTensor:
+    shape = tuple(x.shape)
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block_size)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale, shape)
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    flat = (q.data.astype(jnp.float32) * q.scale).reshape(-1)
+    n = int(np.prod(q.shape)) if q.shape else 1
+    return flat[:n].reshape(q.shape)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LogQTensor:
+    """Log-domain uint8 quantization for strictly-nonnegative tensors with
+    huge dynamic range (Adam's second moment): linear int8 zeroes out small
+    entries in a block whose max is large, exploding 1/sqrt(v) steps. Here
+    the *multiplicative* error is bounded by exp((hi-lo)/254) per block."""
+    data: jax.Array          # uint8 (n_blocks, block)
+    lo: jax.Array            # float32 (n_blocks, 1) log-domain min
+    hi: jax.Array            # float32 (n_blocks, 1) log-domain max
+    shape: Tuple[int, ...]
+
+    def tree_flatten(self):
+        return (self.data, self.lo, self.hi), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux)
+
+
+_LOG_EPS = 1e-30
+
+
+def quantize_log(x: jax.Array, block_size: int = 256) -> LogQTensor:
+    shape = tuple(x.shape)
+    flat = jnp.log(jnp.maximum(x.astype(jnp.float32), _LOG_EPS)).reshape(-1)
+    pad = (-flat.size) % block_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad), constant_values=jnp.log(_LOG_EPS))
+    blocks = flat.reshape(-1, block_size)
+    lo = blocks.min(axis=-1, keepdims=True)
+    hi = blocks.max(axis=-1, keepdims=True)
+    span = jnp.maximum(hi - lo, 1e-12)
+    q = jnp.clip(jnp.round((blocks - lo) / span * 254), 0, 254).astype(jnp.uint8)
+    return LogQTensor(q, lo, hi, shape)
+
+
+def dequantize_log(q: LogQTensor) -> jax.Array:
+    span = jnp.maximum(q.hi - q.lo, 1e-12)
+    logs = q.data.astype(jnp.float32) / 254 * span + q.lo
+    vals = jnp.where(logs <= jnp.log(_LOG_EPS) + 1e-6, 0.0, jnp.exp(logs))
+    flat = vals.reshape(-1)
+    n = int(np.prod(q.shape)) if q.shape else 1
+    return flat[:n].reshape(q.shape)

@@ -1,0 +1,78 @@
+"""Pipeline parallelism: GPipe-style microbatch pipeline over a "pipe" axis.
+
+shard_map-manual over the pipe axis: each stage holds L/P layers (the
+stacked layer params are sharded on their leading "layers" dim), activations
+move stage-to-stage with jax.lax.ppermute. The schedule runs M + P - 1
+ticks for M microbatches (fill + steady state + drain); bubble fraction
+(P-1)/(M+P-1) — reported by ``bubble_fraction`` so configs can pick M.
+
+This is the TPU-idiomatic translation of send/recv pipelines: ppermute is
+a collective-permute on the ICI torus, overlapped with the stage compute by
+XLA's latency-hiding scheduler.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def pipeline_forward(layer_fn: Callable, stage_params, x_micro: jax.Array,
+                     mesh: Mesh, axis: str = "pipe"):
+    """Run a microbatched pipeline forward.
+
+    layer_fn(params_slice, x) -> x : applies ONE STAGE (its layer block).
+    stage_params: pytree with leading dim = num_stages (sharded over axis).
+    x_micro: (M, mb, ...) microbatched input, replicated over the pipe axis.
+    Returns (M, mb, ...) outputs (as produced by the last stage).
+    """
+    p = mesh.shape[axis]
+    m = x_micro.shape[0]
+
+    def stage_prog(params_stage, xs):
+        # params_stage: this stage's params (leading dim 1); xs: (M, mb, ...)
+        params_stage = jax.tree.map(lambda t: t[0], params_stage)
+        sid = jax.lax.axis_index(axis)
+        ticks = m + p - 1
+        buf = jnp.zeros_like(xs[0])                     # current activation
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t (when valid)
+            inject = jnp.where(t < m, t, m - 1)
+            x_in = jnp.where(sid == 0, xs[inject], buf)
+            y = layer_fn(params_stage, x_in)
+            # valid window: stage s works on tick t iff s <= t < s + m
+            valid = (sid <= t) & (t < sid + m)
+            y = jnp.where(valid, y, buf)
+            # last stage records its finished microbatch
+            out_idx = jnp.clip(t - (p - 1), 0, m - 1)
+            record = (sid == p - 1) & (t >= p - 1)
+            outs = jax.lax.cond(
+                record,
+                lambda o: o.at[out_idx].set(y),
+                lambda o: o, outs)
+            # shift activations to the next stage
+            buf = jax.lax.ppermute(y, axis,
+                                   [(i, (i + 1) % p) for i in range(p)])
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # only the last stage's buffer is real; psum of the masked buffers
+        # broadcasts it (one collective, replicated result over pipe)
+        outs = jax.lax.psum(jnp.where(sid == p - 1, outs, 0), axis)
+        return outs
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(stage_prog, mesh=mesh,
+                       in_specs=(spec_params, P()), out_specs=P(),
+                       check_vma=False)
+    return fn(stage_params, x_micro)

@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules (t5x-style) with divisibility-aware fallback.
+
+Every parameter / activation declares *logical* axis names; a rule table maps
+them to mesh axes. ``resolve_pspec`` drops mesh axes that do not divide the
+dimension (e.g. kv_heads=8 over a 16-way "model" axis) and never assigns the
+same mesh axis to two dims of one tensor — later dims fall back to the next
+alternative rule. This keeps one model definition valid across every
+(arch x shape x mesh) cell; the §Perf hillclimb edits rules, not models.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+# Each logical axis may have several alternatives, tried in order.
+Rule = Tuple[str, MeshAxes]
+
+
+DEFAULT_RULES: Tuple[Rule, ...] = (
+    # --- activations ---
+    ("batch", ("pod", "data")),
+    ("seq", None),                  # query sequence (train/prefill)
+    ("kv_seq", "model"),            # decode KV-cache sequence (flash-decoding style)
+    ("long_seq", ("data", "model")),  # 500k decode cache, batch=1
+    ("act_embed", None),
+    ("act_heads", "model"),
+    ("act_kv_heads", "model"),
+    ("act_head_dim", None),
+    ("act_mlp", "model"),
+    ("act_vocab", "model"),
+    ("act_expert", "model"),
+    ("act_ssm_inner", "model"),
+    ("moe_group", ("pod", "data")),   # MoE dispatch-buffer group dim (scatter side)
+    ("moe_group2", ("pod", "data")),  # ...compute side (EP-2D overrides to None)
+    ("act_expert2", "model"),         # ...compute side (EP-2D: ("model","data"))
+    ("moe_cap", None),                # MoE capacity dim
+
+    # --- params ---
+    ("vocab", "model"),
+    ("embed", "data"),              # FSDP: shard params' d_model dim over data
+    ("heads", "model"),
+    ("kv_heads", "model"),          # falls back (replicate) when kv < |model|
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("expert_embed", "data"),
+    ("expert_mlp", "model"),        # used when "expert" could not take the axis
+    ("ssm_inner", "model"),
+    ("ssm_state", None),
+    ("dt_rank", None),
+    ("conv_k", None),
+    ("mla_rank", None),
+    ("layers", None),
+    ("stack", None),
+)
+
+
+def _as_tuple(axes: MeshAxes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+class AxisRules:
+    """Ordered logical->mesh mapping. Later entries with the same logical name
+    act as fallback alternatives."""
+
+    def __init__(self, rules: Sequence[Rule] = DEFAULT_RULES):
+        self.rules: Tuple[Rule, ...] = tuple(rules)
+
+    def alternatives(self, logical: str) -> Tuple[MeshAxes, ...]:
+        alts = tuple(axes for name, axes in self.rules if name == logical)
+        return alts if alts else (None,)
+
+    def override(self, *new_rules: Rule) -> "AxisRules":
+        """New rules take priority (prepended)."""
+        return AxisRules(tuple(new_rules) + self.rules)
+
+    def replacing(self, logical: str, axes: MeshAxes) -> "AxisRules":
+        kept = tuple(r for r in self.rules if r[0] != logical)
+        return AxisRules(((logical, axes),) + kept)
+
+
+_ctx = threading.local()
+
+
+class sharding_context:
+    """Install (mesh, rules) for with_logical_constraint inside model code."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[AxisRules] = None):
+        self.mesh = mesh
+        self.rules = rules or AxisRules()
+
+    def __enter__(self):
+        self._prev = getattr(_ctx, "cur", None)
+        _ctx.cur = self
+        return self
+
+    def __exit__(self, *exc):
+        _ctx.cur = self._prev
+
+
+def current_context() -> Optional["sharding_context"]:
+    return getattr(_ctx, "cur", None)
+
+
+def resolve_pspec(
+    logical_dims: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules,
+) -> P:
+    """Build a PartitionSpec, honoring divisibility and no-axis-reuse."""
+    assert len(logical_dims) == len(shape), (logical_dims, shape)
+    used: set = set()
+    out = []
+    axis_sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    for logical, dim in zip(logical_dims, shape):
+        chosen: MeshAxes = None
+        if logical is not None:
+            for alt in rules.alternatives(logical):
+                axes = tuple(a for a in _as_tuple(alt)
+                             if a in axis_sizes and a not in used)
+                if not axes:
+                    continue
+                total = int(np.prod([axis_sizes[a] for a in axes]))
+                if dim % total == 0:
+                    chosen = axes if len(axes) > 1 else axes[0]
+                    used.update(axes)
+                    break
+                # try a prefix of the axis tuple (e.g. ("data","model")->("data",))
+                for k in range(len(axes) - 1, 0, -1):
+                    sub = axes[:k]
+                    total = int(np.prod([axis_sizes[a] for a in sub]))
+                    if dim % total == 0:
+                        chosen = sub if len(sub) > 1 else sub[0]
+                        used.update(sub)
+                        break
+                if chosen is not None:
+                    break
+        out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(
+    logical_dims: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules,
+) -> NamedSharding:
+    return NamedSharding(mesh, resolve_pspec(logical_dims, shape, mesh, rules))
+
+
+def with_logical_constraint(x: jax.Array, *logical_dims: Optional[str]):
+    """Sharding-constrain an intermediate by logical axis names.
+
+    No-op outside a sharding_context (keeps smoke tests mesh-free).
+    """
+    ctx = current_context()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = resolve_pspec(logical_dims, x.shape, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def logical_sharding(logical_dims, shape) -> Optional[NamedSharding]:
+    ctx = current_context()
+    if ctx is None or ctx.mesh is None:
+        return None
+    return named_sharding(logical_dims, shape, ctx.mesh, ctx.rules)

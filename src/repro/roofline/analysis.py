@@ -1,0 +1,220 @@
+"""Three-term roofline from a compiled dry-run artifact (no hardware needed).
+
+  compute   = HLO_FLOPs_per_device / peak_FLOPs
+  memory    = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+cost_analysis() on a post-SPMD executable reports *per-device* flops/bytes
+(verified empirically), so terms divide by per-chip peaks directly.
+collective_bytes comes from parsing the optimized HLO: we sum the serialized
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting each op kind by the traffic its ring/neighbor
+implementation moves per device relative to the shard size.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(constants per assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link
+HBM_PER_CHIP = 16 * 1024 ** 3
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:[a-z0-9]+\[[^\]]*\](?:,\s*)?)+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# Per-device traffic multiplier relative to the op's *output* buffer size,
+# for ring implementations over a group of size g:
+#   all-reduce: 2*(g-1)/g x (reduce-scatter + all-gather)
+#   all-gather: (g-1)/g of the full output
+#   reduce-scatter: (g-1)/g of the full input
+#   all-to-all: (g-1)/g of the buffer
+#   collective-permute: 1x
+def _traffic_factor(kind: str, group: int) -> float:
+    if group <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (group - 1) / group
+    if kind == "collective-permute":
+        return 1.0
+    return (group - 1) / group
+
+
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float = 0.0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, nbytes: float):
+        self.total_bytes += nbytes
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + nbytes
+        self.count += 1
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic from optimized HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _COLLECTIVE_RE.search(s)
+        if not m:
+            continue
+        if s.startswith("ROOT"):
+            s = s[4:].strip()
+        shape_str, kind = m.group(2), m.group(3).lower()
+        buf = _shape_bytes(shape_str)
+        g = _group_size(s)
+        stats.add(kind, buf * _traffic_factor(kind, g))
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_by_kind: Dict[str, float]
+    peak_mem_bytes: float
+    arg_bytes: float
+    model_flops: float            # 6*N*D (global, analytic)
+    hlo_flops_global: float
+    extras: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute-term / max-term: 1.0 = perfectly compute-bound."""
+        t = self.roofline_time
+        return self.t_compute / t if t > 0 else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return (self.model_flops / self.hlo_flops_global
+                if self.hlo_flops_global else 0.0)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 roofline_fraction=self.roofline_fraction,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def analyze(compiled, hlo_text: str, *, arch: str, shape: str, mesh_name: str,
+            chips: int, model_flops: float) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    Uses the HLO-walking cost model (repro.roofline.hlo_cost), NOT
+    compiled.cost_analysis(): XLA's analysis counts while (scan) bodies once,
+    undercounting scanned layer stacks by ~num_layers x (verified).
+    """
+    from repro.roofline.hlo_cost import HloCostModel
+    model = HloCostModel(hlo_text)
+    c = model.cost()
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        resident = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+        peak = float(max(getattr(mem, "peak_memory_in_bytes", 0) or 0, resident))
+        args = float(mem.argument_size_in_bytes)
+    else:
+        peak = args = 0.0
+    xla_cost = compiled.cost_analysis() or {}
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=c.flops, bytes_per_device=c.hbm_bytes,
+        coll_bytes_per_device=c.coll_bytes, coll_by_kind=c.coll_by_kind,
+        peak_mem_bytes=peak, arg_bytes=args, model_flops=model_flops,
+        hlo_flops_global=c.flops * chips)
+    r.extras = {
+        "xla_cost_flops_per_device": float(xla_cost.get("flops", 0.0)),
+        "top_opcode_bytes": dict(sorted(c.by_opcode_bytes.items(),
+                                        key=lambda kv: -kv[1])[:10]),
+        "num_collectives": c.coll_count,
+        "while_trip_counts": sorted({t for _, t, _ in model.while_loops}),
+    }
+    return r
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D with N = active params (MoE) — the 'useful' flop floor."""
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per row

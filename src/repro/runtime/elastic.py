@@ -1,0 +1,83 @@
+"""Elastic mesh management: shrink/grow the device mesh, reshard state.
+
+At 1000+ node scale the question is never *if* a slice disappears but how
+cheaply the job re-forms. The paper's pilot model answers structurally
+(allocation is a placeholder, re-acquirable); this module supplies the
+mechanical half for JAX: given survivors, build the largest well-formed
+(data, model) mesh, recompute every PartitionSpec through the same AxisRules
+table, and device_put host state into the new placement. Model-parallel
+degree is preserved when possible (weights reshard cheaply along data) and
+reduced only when survivors < model_parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh, NamedSharding
+
+from repro.parallel.sharding import AxisRules, resolve_pspec
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_devices: int
+
+
+def plan_mesh(num_devices: int, model_parallel: int,
+              axes: Tuple[str, ...] = ("data", "model")) -> MeshPlan:
+    """Largest (data, model) grid over the survivors."""
+    mp = min(model_parallel, num_devices)
+    while num_devices % mp and mp > 1:
+        mp -= 1
+    dp = num_devices // mp
+    used = dp * mp
+    return MeshPlan(shape=(dp, mp), axes=axes,
+                    dropped_devices=num_devices - used)
+
+
+def build_mesh(devices: Sequence, plan: MeshPlan) -> Mesh:
+    used = int(np.prod(plan.shape))
+    arr = np.array(list(devices)[:used]).reshape(plan.shape)
+    return Mesh(arr, plan.axes,
+                axis_types=(AxisType.Auto,) * len(plan.axes))
+
+
+def reshard_state(host_state, spec_tree, mesh: Mesh, rules: AxisRules):
+    """host arrays + logical specs -> device arrays on the new mesh."""
+    def put(spec, leaf):
+        ps = resolve_pspec(spec.logical, spec.shape, mesh, rules)
+        return jax.device_put(np.asarray(leaf), NamedSharding(mesh, ps))
+    from repro.models.common import ParamSpec
+    return jax.tree.map(put, spec_tree, host_state,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class ElasticController:
+    """Track live devices; rebuild mesh + shardings on membership change."""
+
+    def __init__(self, model_parallel: int, rules: Optional[AxisRules] = None):
+        self.model_parallel = model_parallel
+        self.rules = rules or AxisRules()
+        self.generation = 0
+        self.mesh: Optional[Mesh] = None
+        self.events: List[dict] = []
+
+    def form(self, devices: Sequence) -> Mesh:
+        plan = plan_mesh(len(devices), self.model_parallel)
+        self.mesh = build_mesh(devices, plan)
+        self.generation += 1
+        self.events.append({"generation": self.generation,
+                            "devices": len(devices), "shape": plan.shape,
+                            "dropped": plan.dropped_devices})
+        return self.mesh
+
+    def on_failure(self, surviving) -> Mesh:
+        return self.form(surviving)
+
+    def on_join(self, devices) -> Mesh:
+        return self.form(devices)

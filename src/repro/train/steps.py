@@ -1,0 +1,176 @@
+"""Train / prefill / decode step builders + abstract input specs.
+
+``make_train_step`` returns (step_fn, state_specs): pure functions over a
+TrainState pytree, ready for jax.jit with in/out shardings resolved from the
+AxisRules table. Microbatching (gradient accumulation) runs as a lax.scan so
+activation memory scales with the microbatch, not the global batch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ParallelConfig, ShapeConfig,
+                                TrainConfig)
+from repro.models.common import cross_entropy_loss
+from repro.models.model import Model
+from repro.optim.adamw import OptState, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+from repro.parallel.sharding import (AxisRules, resolve_pspec,
+                                     sharding_context)
+
+MOE_AUX_COEF = 0.01
+MTP_COEF = 0.3
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: OptState
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def compute_loss(model: Model, params, batch, tcfg: TrainConfig):
+    out = model.train_forward(params, batch)
+    labels = batch["labels"]
+    loss = cross_entropy_loss(out["logits"], labels, z_loss=tcfg.z_loss)
+    total = loss + MOE_AUX_COEF * out["aux"]
+    metrics = {"loss": loss, "aux": out["aux"]}
+    if "mtp_logits" in out:
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        mtp = cross_entropy_loss(out["mtp_logits"], mtp_labels, mask=mask)
+        total = total + MTP_COEF * mtp
+        metrics["mtp_loss"] = mtp
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, pcfg: ParallelConfig, tcfg: TrainConfig):
+    def train_step(state: TrainState, batch):
+        def loss_fn(params, mb):
+            return compute_loss(model, params, mb, tcfg)
+
+        if pcfg.microbatches > 1:
+            n = pcfg.microbatches
+            mb_batch = jax.tree.map(
+                lambda t: t.reshape((n, t.shape[0] // n) + t.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_acc, m_acc = carry
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, grads)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            m0 = {"loss": 0.0, "aux": 0.0, "total_loss": 0.0}
+            if model.cfg.mtp_depth:
+                m0["mtp_loss"] = 0.0
+            m0 = jax.tree.map(jnp.float32, m0)
+            (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), mb_batch)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(lambda m: m / n, metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+
+        lr = warmup_cosine(state.opt_state.count, tcfg)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, state.opt_state, state.params, lr, tcfg,
+            state_dtype=pcfg.opt_state_dtype)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, key, pcfg: ParallelConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, adamw_init(params, pcfg.opt_state_dtype))
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, positions):
+        return model.decode(params, cache, tokens, positions)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct) + logical axes, per (arch x shape)
+# ---------------------------------------------------------------------------
+
+def batch_logical(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+    """name -> ((shape), (logical axes), dtype) for the input batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {
+            "tokens": ((b, 1), ("batch", None), jnp.int32),
+            "positions": ((b,), ("batch",), jnp.int32),
+        }
+    st = s - cfg.vision_tokens
+    out = {"tokens": ((b, st), ("batch", "seq"), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = ((b, st), ("batch", "seq"), jnp.int32)
+    if cfg.vision_tokens:
+        out["patch_embeds"] = ((b, cfg.vision_tokens, cfg.vision_embed_dim),
+                               ("batch", None, None), jnp.bfloat16)
+    if cfg.encoder_layers:
+        out["frames"] = ((b, cfg.encoder_seq_len, cfg.d_model),
+                         ("batch", None, "act_embed"), jnp.bfloat16)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: AxisRules):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the batch."""
+    logical = batch_logical(cfg, shape)
+    sds = {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, lg, dt) in logical.items()}
+    pspecs = {k: resolve_pspec(lg, sh, mesh, rules)
+              for k, (sh, lg, dt) in logical.items()}
+    return sds, pspecs
+
+
+def _cache_leaf_dtype(path) -> Any:
+    """Cache dtype by leaf name: pos -> int32, ssm state -> fp32, else bf16."""
+    keys = [getattr(p, "key", None) for p in path]
+    if keys and keys[-1] == "pos":
+        return jnp.int32
+    if keys and keys[-1] == "ssm":
+        return jnp.float32
+    return jnp.bfloat16
+
+
+def cache_specs(model: Model, shape: ShapeConfig, mesh, rules: AxisRules):
+    """(SDS tree, pspec tree) for the decode cache at this shape."""
+    spec = model.cache_spec(shape.global_batch, shape.seq_len)
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[0], tuple)
+                         and all(isinstance(i, int) for i in x[0]))
+    sds = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.ShapeDtypeStruct(leaf[0], _cache_leaf_dtype(path)),
+        spec, is_leaf=is_leaf)
+    ps = jax.tree.map(lambda leaf: resolve_pspec(leaf[1], leaf[0], mesh, rules),
+                      spec, is_leaf=is_leaf)
+    return sds, ps

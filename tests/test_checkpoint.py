@@ -1,0 +1,73 @@
+"""Checkpoint save/restore: bf16 round-trip, async overlap, GC, elastic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.train.steps import TrainState
+from repro.optim.adamw import OptState
+
+
+def _state(key=0):
+    k = jax.random.key(key)
+    params = {"w": jax.random.normal(k, (8, 16), jnp.bfloat16),
+              "scan": jax.random.normal(k, (4, 8, 8), jnp.bfloat16)}
+    opt = OptState(m=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+                   v=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+                   count=jnp.int32(7))
+    return TrainState(params, opt)
+
+
+def test_roundtrip_bf16(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    state = _state()
+    ckpt.save(10, state)
+    restored, step = ckpt.restore(state)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_restore(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    state = _state()
+    ckpt.save(5, state, blocking=False)
+    restored, step = ckpt.restore(state)  # restore waits for the writer
+    assert step == 5
+    assert int(restored.opt_state.count) == 7
+
+
+def test_gc_keeps_latest(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, state)
+    assert sorted(ckpt.list_steps()) == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=5)
+    s1, s2 = _state(1), _state(2)
+    ckpt.save(1, s1)
+    ckpt.save(2, s2)
+    r1, _ = ckpt.restore(s1, step=1)
+    np.testing.assert_array_equal(np.asarray(r1.params["w"]),
+                                  np.asarray(s1.params["w"]))
+
+
+def test_elastic_restore_with_new_sharding(tmp_path):
+    """Restore with explicit shardings = the re-mesh path."""
+    ckpt = CheckpointManager(tmp_path)
+    state = _state()
+    ckpt.save(1, state)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        state)
+    restored, _ = ckpt.restore(state, shardings=sh)
+    assert isinstance(restored.params["w"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(restored.params["w"]),
+                                  np.asarray(state.params["w"]))

@@ -1,0 +1,92 @@
+"""MoE dispatch invariants: sort-based positions, capacity, grouping,
+router numerics (hypothesis property tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models.moe import _positions_in_expert, _route, moe_ffn, router_load
+from repro.models.common import init_params
+from repro.models import moe as moe_mod
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=st.integers(1, 4), t=st.integers(1, 128), e=st.integers(1, 16),
+       seed=st.integers(0, 100))
+def test_positions_in_expert_is_occurrence_rank(g, t, e, seed):
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(rng.integers(0, e, size=(g, t)), jnp.int32)
+    pos = np.asarray(_positions_in_expert(flat))
+    for gi in range(g):
+        seen = {}
+        for ti in range(t):
+            eid = int(flat[gi, ti])
+            assert pos[gi, ti] == seen.get(eid, 0)
+            seen[eid] = seen.get(eid, 0) + 1
+
+
+def _moe_cfg(cf=8.0, experts=4, top_k=2):
+    cfg = reduced(get_config("mixtral_8x22b"))
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=cf, num_experts=experts, top_k=top_k))
+
+
+def test_moe_capacity_drops_tokens():
+    """cf -> 0 forces drops; output rows for dropped tokens shrink toward
+    the shared-expert-only value (here: zero)."""
+    cfg_hi = _moe_cfg(cf=8.0)
+    cfg_lo = dataclasses.replace(cfg_hi, moe=dataclasses.replace(
+        cfg_hi.moe, capacity_factor=0.05))
+    params = init_params(jax.random.key(0), moe_mod.moe_specs(cfg_hi))
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg_hi.d_model),
+                          jnp.bfloat16)
+    y_hi, _ = moe_ffn(params, x, cfg_hi)
+    y_lo, _ = moe_ffn(params, x, cfg_lo)
+    n_hi = float(jnp.linalg.norm(y_hi.astype(jnp.float32)))
+    n_lo = float(jnp.linalg.norm(y_lo.astype(jnp.float32)))
+    assert n_lo < n_hi
+
+
+def test_moe_grouping_matches_ungrouped():
+    """Decode regrouping (s*k < E) must not change results when capacity is
+    ample — same tokens, same experts, different group partitioning."""
+    cfg = _moe_cfg(cf=32.0, experts=16, top_k=2)
+    params = init_params(jax.random.key(0), moe_mod.moe_specs(cfg))
+    xb = jax.random.normal(jax.random.key(1), (8, 1, cfg.d_model),
+                           jnp.bfloat16)
+    y_dec, _ = moe_ffn(params, xb, cfg)          # s*k=2 < 16 -> regroups
+    y_ref, _ = moe_ffn(params, xb.reshape(1, 8, cfg.d_model), cfg)
+    np.testing.assert_allclose(np.asarray(y_dec.reshape(1, 8, -1), np.float32),
+                               np.asarray(y_ref, np.float32), atol=1e-2,
+                               rtol=1e-2)
+
+
+def test_router_weights_normalized():
+    cfg = _moe_cfg()
+    params = init_params(jax.random.key(0), moe_mod.moe_specs(cfg))
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model), jnp.bfloat16)
+    w, idx, aux = _route(params, x, cfg.moe)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+    assert int(idx.max()) < cfg.moe.num_experts
+    assert float(aux) >= 0.0
+
+
+def test_aux_free_router_bias_shifts_selection():
+    """DeepSeek aux-free balancing: raising one expert's bias attracts load."""
+    cfg = reduced(get_config("deepseek_v3_671b"))
+    params = init_params(jax.random.key(0), moe_mod.moe_specs(cfg))
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model), jnp.bfloat16)
+    load0 = np.asarray(router_load(params, x, cfg))
+    params2 = dict(params)
+    params2["router_bias"] = params["router_bias"] + jnp.zeros_like(
+        params["router_bias"]).at[0].set(10.0)
+    load1 = np.asarray(router_load(params2, x, cfg))
+    assert load1[0] > load0[0]
+    # bias affects selection only, not weights of chosen experts' outputs
+    w, idx, _ = _route(params2, x, cfg.moe)
+    assert float(w.min()) >= 0.0

@@ -1,0 +1,76 @@
+"""Optimizer + quantization + gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.quant import QTensor, dequantize, quantize
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000),
+       scale=st.sampled_from([1e-6, 1e-2, 1.0, 1e3]),
+       block=st.sampled_from([32, 256]))
+def test_quantize_roundtrip_error_bound(n, scale, block):
+    x = scale * np.random.default_rng(n).normal(size=(n,)).astype(np.float32)
+    q = quantize(jnp.asarray(x), block)
+    back = np.asarray(dequantize(q))
+    assert back.shape == x.shape
+    # symmetric int8: error bounded by scale/127 per block (= max|block|/127)
+    bound = np.abs(x).max() / 127 + 1e-12
+    assert np.max(np.abs(back - x)) <= bound * 1.0001
+
+
+def test_quantize_preserves_shape_tree_through_jit():
+    x = jnp.arange(300, dtype=jnp.float32).reshape(10, 30)
+    q = jax.jit(lambda t: quantize(t))(x)
+    assert isinstance(q, QTensor) and q.shape == (10, 30)
+    np.testing.assert_allclose(np.asarray(dequantize(q)), np.asarray(x),
+                               atol=x.max() / 127 * 1.01)
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges_quadratic(state_dtype):
+    """min ||w - target||^2 — every state dtype must converge."""
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((16, 16), jnp.float32)}
+    cfg = TrainConfig(learning_rate=0.1, weight_decay=0.0, grad_clip=0.0)
+    opt = adamw_init(params, state_dtype)
+    for _ in range(120):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(grads, opt, params, 0.05, cfg,
+                                      state_dtype)
+    err = float(jnp.max(jnp.abs(params["w"] - target)))
+    assert err < 0.05, (state_dtype, err)
+
+
+def test_adamw_grad_clip_caps_update():
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    cfg = TrainConfig(learning_rate=1.0, grad_clip=1.0, weight_decay=0.0)
+    opt = adamw_init(params)
+    _, _, gnorm = adamw_update({"w": jnp.full((4,), 100.0)}, opt, params,
+                               1.0, cfg)
+    assert float(gnorm) == pytest.approx(200.0)
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    cfg = TrainConfig(learning_rate=0.1, weight_decay=1.0, grad_clip=0.0)
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    opt = adamw_init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new_p, _, _ = adamw_update(zero_g, opt, params, 0.1, cfg)
+    assert float(jnp.max(jnp.abs(new_p["b"] - 1.0))) < 1e-6  # no decay
+    assert float(jnp.max(new_p["w"])) < 1.0                  # decayed
+
+
+def test_int8_opt_state_memory_is_quarter():
+    params = {"w": jnp.zeros((1024, 256), jnp.float32)}
+    o32 = adamw_init(params, "float32")
+    o8 = adamw_init(params, "int8")
+    b32 = o32.m["w"].nbytes
+    b8 = o8.m["w"].data.nbytes + o8.m["w"].scale.nbytes
+    assert b8 < 0.30 * b32

@@ -1,0 +1,128 @@
+"""Multi-device (placeholder grid) tests: pipeline parallelism, compressed
+pod reduction, dry-run lowering. Run in subprocesses because the device
+count must be fixed before jax initializes."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pipeline_parallel_matches_sequential():
+    _run("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.pipeline import pipeline_forward, bubble_fraction
+        mesh = make_mesh((4,), ("pipe",))
+        P, M, mb, d = 4, 8, 2, 16
+        ws = jax.random.normal(jax.random.key(0), (P, d, d)) * 0.1
+        xs = jax.random.normal(jax.random.key(1), (M, mb, d))
+        layer_fn = lambda w, x: jnp.tanh(x @ w)
+        with mesh:
+            out = pipeline_forward(layer_fn, ws, xs, mesh, axis="pipe")
+        ref = xs
+        for i in range(P):
+            ref = jnp.tanh(ref @ ws[i])
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+        assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
+        print("OK")
+    """)
+
+
+def test_compressed_pod_mean_quantization_bound():
+    _run("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.optim.compression import compressed_pod_mean, init_residuals
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        g = {"w": jax.random.normal(jax.random.key(0), (8, 16), jnp.float32)}
+        r = init_residuals(g)
+        with mesh:
+            gm, rn = jax.jit(lambda g, r: compressed_pod_mean(g, r, mesh))(g, r)
+        rel = float(jnp.max(jnp.abs(gm["w"] - g["w"]))) / float(jnp.max(jnp.abs(g["w"])))
+        assert rel < 0.02, rel
+        # error feedback: residual equals quantization error
+        assert float(jnp.linalg.norm(rn["w"])) > 0
+        print("OK")
+    """)
+
+
+def test_dryrun_cell_small_mesh():
+    """Lower + compile one real cell on a 4x2 grid (fast sanity of the
+    dry-run machinery without the 512-device cost)."""
+    _run("""
+        import jax
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig, SHAPES, reduced
+        from repro.launch.mesh import make_mesh
+        from repro.launch.dryrun import build_lowerable
+        from repro.parallel.sharding import AxisRules
+        import dataclasses
+        cfg = reduced(get_config("llama3_2_1b"), num_layers=2)
+        mesh = make_mesh((4, 2), ("data", "model"))
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
+        jitted, args = build_lowerable(cfg, shape, mesh, AxisRules(), ParallelConfig())
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+        assert compiled.memory_analysis() is not None
+        print("OK")
+    """)
+
+
+def test_dryrun_decode_cell_small_mesh():
+    _run("""
+        import jax, dataclasses
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig, SHAPES, reduced
+        from repro.launch.mesh import make_mesh
+        from repro.launch.dryrun import build_lowerable
+        from repro.parallel.sharding import AxisRules
+        cfg = reduced(get_config("yi_9b"), num_layers=2)
+        mesh = make_mesh((4, 2), ("data", "model"))
+        shape = dataclasses.replace(SHAPES["decode_32k"], seq_len=128, global_batch=8)
+        jitted, args = build_lowerable(cfg, shape, mesh, AxisRules(), ParallelConfig())
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+        print("OK")
+    """)
+
+
+def test_elastic_shrink_then_lower():
+    """Form a mesh, 'lose' devices, re-form smaller, relower the step."""
+    _run("""
+        import jax, dataclasses
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig, SHAPES, reduced
+        from repro.launch.dryrun import build_lowerable
+        from repro.parallel.sharding import AxisRules
+        from repro.runtime.elastic import ElasticController
+        cfg = reduced(get_config("llama3_2_1b"), num_layers=2)
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
+        ctl = ElasticController(model_parallel=2)
+        mesh = ctl.form(jax.devices())                      # 4x2
+        jitted, args = build_lowerable(cfg, shape, mesh, AxisRules(), ParallelConfig())
+        with mesh:
+            jitted.lower(*args).compile()
+        mesh2 = ctl.on_failure(jax.devices()[:4])           # 2x2 survivors
+        jitted2, args2 = build_lowerable(cfg, shape, mesh2, AxisRules(), ParallelConfig())
+        with mesh2:
+            jitted2.lower(*args2).compile()
+        assert ctl.generation == 2
+        print("OK")
+    """)

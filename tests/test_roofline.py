@@ -1,0 +1,85 @@
+"""HLO cost model: trip-count multiplication, dot flops, collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import HloCostModel, shape_bytes
+from repro.roofline.analysis import (CollectiveStats, Roofline,
+                                     model_flops_estimate)
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplied():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(8):
+            x, _ = body(x, ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    cs = HloCostModel(_compile(scanned, x, ws)).cost()
+    cu = HloCostModel(_compile(unrolled, x, ws)).cost()
+    analytic = 2 * 128 * 256 * 256 * 8
+    assert cs.flops == pytest.approx(analytic, rel=0.01)
+    assert cu.flops == pytest.approx(analytic, rel=0.01)
+
+
+def test_dot_flops_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    c = HloCostModel(_compile(f, a, b)).cost()
+    assert c.flops == pytest.approx(2 * 4 * 32 * 64 * 16, rel=0.01)
+
+
+def test_shape_bytes_parses_layouts_and_tuples():
+    assert shape_bytes("f32[16,8]{1,0}") == 512
+    assert shape_bytes("(bf16[4,4], s32[2])") == 32 + 8
+    assert shape_bytes("pred[10]") == 10
+
+
+def test_collective_bytes_ring_model():
+    hlo = """
+HloModule test
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  ROOT %all-reduce = f32[64]{0} all-reduce(%p), channel_id=1, replica_groups=[2,8]<=[16], to_apply=%add
+}
+"""
+    c = HloCostModel(hlo).cost()
+    # ring all-reduce over 8: 2*(7/8)*256 bytes
+    assert c.coll_bytes == pytest.approx(2 * (7 / 8) * 256)
+    assert c.coll_by_kind["all-reduce"] == c.coll_bytes
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="m", chips=256,
+                 flops_per_device=197e12, bytes_per_device=819e9 * 2,
+                 coll_bytes_per_device=50e9 * 0.5, coll_by_kind={},
+                 peak_mem_bytes=1, arg_bytes=1, model_flops=1.0,
+                 hlo_flops_global=2.0)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_estimate_moe_uses_active():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    cfg = get_config("deepseek_v3_671b")
+    dense_equiv = 6.0 * cfg.num_params() * 256 * 4096
+    active = model_flops_estimate(cfg, SHAPES["train_4k"])
+    assert active < 0.2 * dense_equiv  # top-8/256 + shared << dense

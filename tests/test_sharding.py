@@ -1,0 +1,88 @@
+"""AxisRules / resolve_pspec invariants (hypothesis property tests)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from repro.parallel.sharding import AxisRules, resolve_pspec
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def _fake_mesh(shape, axes):
+    """Mesh over abstract devices (no allocation) for spec resolution."""
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+LOGICALS = ["batch", "seq", "embed", "heads", "kv_heads", "mlp", "vocab",
+            "expert", "layers", None]
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims=st.lists(st.sampled_from(LOGICALS), min_size=1, max_size=4),
+       sizes=st.lists(st.sampled_from([1, 2, 3, 4, 8, 16, 25, 36, 48, 129]),
+                      min_size=1, max_size=4))
+def test_resolve_pspec_invariants(dims, sizes):
+    n = min(len(dims), len(sizes))
+    dims, sizes = dims[:n], sizes[:n]
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    rules = AxisRules()
+    spec = resolve_pspec(dims, sizes, mesh, rules)
+    axis_sizes = dict(zip(("pod", "data", "model"), (2, 16, 16)))
+    used = []
+    for entry, size in zip(tuple(spec) + (None,) * n, sizes):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        prod = int(np.prod([axis_sizes[a] for a in axes]))
+        # 1. divisibility always holds
+        assert size % prod == 0, (dims, sizes, spec)
+        used.extend(axes)
+    # 2. no mesh axis used twice
+    assert len(used) == len(set(used)), (dims, sizes, spec)
+
+
+def _entry(spec, i):
+    return spec[i] if i < len(spec) else None
+
+
+def test_kv_heads_fall_back_to_replication():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    spec = resolve_pspec(("embed", "kv_heads", "head_dim"), (4096, 8, 128),
+                         mesh, AxisRules())
+    assert _entry(spec, 1) is None  # 8 kv heads % 16 -> replicate
+    assert _entry(spec, 0) == "data"
+
+
+def test_expert_axis_conflict_resolution():
+    """Mixtral: 8 experts can't take the 16-way model axis; the expert_mlp
+    dim picks it up instead."""
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    rules = AxisRules()
+    spec = resolve_pspec(("expert", "expert_embed", "expert_mlp"),
+                         (8, 6144, 16384), mesh, rules)
+    assert spec == jax.sharding.PartitionSpec(None, "data", "model")
+    # DeepSeek: 256 experts take the model axis; mlp falls back to None
+    spec2 = resolve_pspec(("expert", "expert_embed", "expert_mlp"),
+                          (256, 7168, 2048), mesh, rules)
+    assert _entry(spec2, 0) == "model"
+    assert _entry(spec2, 1) == "data"
+
+
+def test_rule_override_priority():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    rules = AxisRules().override(("seq", "model"))
+    spec = resolve_pspec(("batch", "seq"), (256, 4096), mesh, rules)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_batch_one_replicates():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    spec = resolve_pspec(("batch", "long_seq"), (1, 524288), mesh, AxisRules())
+    assert _entry(spec, 0) is None
+    assert _entry(spec, 1) == ("data", "model")

@@ -16,12 +16,19 @@ if str(SRC) not in sys.path:
 def main() -> None:
     from benchmarks import (bench_fig6_startup, bench_fig7_storage,
                             bench_fig8_profiles, bench_fig9_kmeans,
-                            bench_kernels, bench_roofline, bench_train_step)
+                            bench_kernels, bench_roofline, bench_tiering,
+                            bench_train_step)
+    quick = "--quick" in sys.argv
     print("name,us_per_call,derived")
+    if quick:
+        # CI smoke: the tiering bench exercises pilots, DUs, the managed
+        # hierarchy, and the KMeans path end-to-end in a few seconds
+        bench_tiering.run(quick=True)
+        return
     failures = 0
     for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
-                bench_fig9_kmeans, bench_kernels, bench_train_step,
-                bench_roofline):
+                bench_fig9_kmeans, bench_kernels, bench_tiering,
+                bench_train_step, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

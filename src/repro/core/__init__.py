@@ -18,11 +18,13 @@ from repro.core.mapreduce import map_reduce
 from repro.core.memory import (PROFILES, TIERS, TierProfile, make_backend)
 from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription, State)
+from repro.core.tiering import CapacityError, TierManager, make_tier_manager
 
 __all__ = [
     "DataUnit", "DataUnitDescription", "ComputeDataManager",
     "PilotComputeService", "map_reduce", "PROFILES", "TIERS", "TierProfile",
     "make_backend", "ComputeUnit", "ComputeUnitDescription", "PilotCompute",
     "PilotComputeDescription", "State", "kmeans", "KMeansResult",
-    "assign_partial", "make_blobs",
+    "assign_partial", "make_blobs", "CapacityError", "TierManager",
+    "make_tier_manager",
 ]

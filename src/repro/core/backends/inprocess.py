@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core.backends.base import ComputeBackend, register_backend
 from repro.core.pilot import PilotCompute, PilotComputeDescription
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, mesh_axis_types
 
 
 class InProcessBackend(ComputeBackend):
@@ -46,10 +46,16 @@ class InProcessBackend(ComputeBackend):
         devices = self._lease(n)
         shape = desc.mesh_shape or (len(devices),)
         axes = desc.mesh_axes[:len(shape)] or ("data",)
-        mesh = jax.sharding.Mesh(
-            np.array(devices).reshape(shape), axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        mesh = jax.sharding.Mesh(np.array(devices).reshape(shape), axes,
+                                 **mesh_axis_types(len(shape)))
         pilot = PilotCompute(desc, mesh)
+        if desc.memory_gb:
+            # the memory ask becomes a managed device-tier budget: DUs placed
+            # through this pilot's TierManager are retained in HBM up to the
+            # ask and demoted to host RAM beyond it
+            from repro.core.tiering import make_tier_manager
+            pilot.attach_tier_manager(make_tier_manager(
+                device_budget=int(desc.memory_gb * 2 ** 30), mesh=mesh))
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

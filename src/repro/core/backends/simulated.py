@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.backends.base import ComputeBackend, register_backend
 from repro.core.pilot import ComputeUnit, PilotCompute, PilotComputeDescription, State
+from repro.launch.mesh import mesh_axis_types
 
 # provisioning latency models (seconds): (fixed, per_device) — scaled down
 # 100x from the paper's observed seconds so test suites stay fast; the
@@ -100,9 +101,8 @@ class SimulatedClusterBackend(ComputeBackend):
         if self.use_devices:
             n = max(1, min(desc.num_devices, jax.device_count()))
             devices = jax.devices()[:n]
-            mesh = jax.sharding.Mesh(
-                np.array(devices), ("data",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = jax.sharding.Mesh(np.array(devices), ("data",),
+                                     **mesh_axis_types(1))
         pilot = SimulatedPilot(desc, mesh, self.policy)
         pilot.start()
         pilot.provision_time = time.time() - t0

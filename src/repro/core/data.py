@@ -3,9 +3,16 @@
 Paper §3: "A Data-Unit represents a self-contained, related set of data";
 Pilot-Data manages DUs across heterogeneous storage, ensures availability
 before a Compute-Unit starts, and exposes *affinity labels* so the scheduler
-can co-locate compute with data. Here a DU's partitions live in exactly one
-tier at a time (file/object/host/device) and can be moved (staged) between
-tiers explicitly or by the ComputeDataManager's late-binding placement.
+can co-locate compute with data. A DU's partitions live in storage tiers
+(file/object/host/device) and can be moved (staged) between tiers explicitly
+or by the ComputeDataManager's late-binding placement.
+
+With a TierManager attached (repro.core.tiering) the DU becomes part of a
+*managed* hierarchy: `tier` is the preferred/nominal placement, but each
+partition's actual residency is tracked by the manager, which enforces
+capacity budgets, demotes LRU partitions under pressure, promotes hot ones,
+and stages asynchronously. Reads always go through the manager so they find
+a partition wherever it currently lives and record access heat.
 """
 from __future__ import annotations
 
@@ -13,12 +20,14 @@ import dataclasses
 import threading
 import time
 import uuid
+from concurrent.futures import Future
 from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.memory import StorageBackend, TIERS
+from repro.core.tiering import TierManager
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,16 +38,18 @@ class DataUnitDescription:
 
 
 class DataUnit:
-    """A partitioned dataset resident in one storage tier."""
+    """A partitioned dataset resident in one (managed) storage tier."""
 
     def __init__(self, description: DataUnitDescription,
                  backends: Dict[str, StorageBackend],
-                 num_partitions: int = 0):
+                 num_partitions: int = 0,
+                 tier_manager: Optional[TierManager] = None):
         self.description = description
         self.name = description.name or f"du-{uuid.uuid4().hex[:8]}"
         self.backends = backends
         self.num_partitions = num_partitions
         self.tier: str = description.preferred_tier
+        self.tier_manager = tier_manager
         self._lock = threading.Lock()
         self.transfer_log: List[dict] = []   # telemetry for benchmarks
 
@@ -46,21 +57,29 @@ class DataUnit:
     @classmethod
     def from_partitions(cls, name: str, parts: Sequence[np.ndarray],
                         backends: Dict[str, StorageBackend],
-                        tier: str = "host", affinity: str = "") -> "DataUnit":
+                        tier: str = "host", affinity: str = "",
+                        tier_manager: Optional[TierManager] = None
+                        ) -> "DataUnit":
         du = cls(DataUnitDescription(name, affinity, tier), backends,
-                 num_partitions=len(parts))
-        be = du._backend(tier)
-        for i, p in enumerate(parts):
-            be.put(du._key(i), np.asarray(p))
+                 num_partitions=len(parts), tier_manager=tier_manager)
+        if tier_manager is not None:
+            for i, p in enumerate(parts):
+                tier_manager.put(du._key(i), np.asarray(p), tier)
+        else:
+            be = du._backend(tier)
+            for i, p in enumerate(parts):
+                be.put(du._key(i), np.asarray(p))
         du.tier = tier
         return du
 
     @classmethod
     def from_array(cls, name: str, arr: np.ndarray, num_partitions: int,
                    backends: Dict[str, StorageBackend], tier: str = "host",
-                   affinity: str = "") -> "DataUnit":
+                   affinity: str = "",
+                   tier_manager: Optional[TierManager] = None) -> "DataUnit":
         parts = np.array_split(np.asarray(arr), num_partitions, axis=0)
-        return cls.from_partitions(name, parts, backends, tier, affinity)
+        return cls.from_partitions(name, parts, backends, tier, affinity,
+                                   tier_manager=tier_manager)
 
     # ------------------------------------------------------------------
     def _key(self, i: int) -> str:
@@ -76,10 +95,48 @@ class DataUnit:
     def affinity(self) -> str:
         return self.description.affinity
 
+    def attach_tier_manager(self, tm: TierManager) -> "DataUnit":
+        """Adopt this DU's partitions into a managed hierarchy.
+
+        The manager's backends replace the DU's flat backend dict; existing
+        partitions are registered (and count against budgets) in place when
+        the manager wraps the same backend, else copied into the manager's.
+        """
+        same = tm.backends.get(self.tier) is self.backends.get(self.tier)
+        for i in range(self.num_partitions):
+            if same:
+                tm.adopt(self._key(i), self.tier)
+            else:
+                tm.put(self._key(i),
+                       self._backend(self.tier).get(self._key(i)), self.tier)
+        self.backends = tm.backends
+        self.tier_manager = tm
+        return self
+
     def partition(self, i: int) -> np.ndarray:
-        return self._backend(self.tier).get(self._key(i))
+        key = self._key(i)
+        if self.tier_manager is not None:
+            return np.asarray(self.tier_manager.get(key))
+        # a concurrent to_tier() moves copy-first/delete-last, so on a miss
+        # the partition is guaranteed to exist in some other tier — retry
+        for _ in range(8):
+            try:
+                return self._backend(self.tier).get(key)
+            except (KeyError, FileNotFoundError):
+                for t in reversed(TIERS):
+                    be = self.backends.get(t)
+                    if be is None or t == self.tier:
+                        continue
+                    try:
+                        if be.exists(key):
+                            return be.get(key)
+                    except (KeyError, FileNotFoundError):
+                        continue
+        raise KeyError(key)
 
     def partition_device(self, i: int) -> jax.Array:
+        if self.tier_manager is not None:
+            return self.tier_manager.get_device(self._key(i))
         be = self._backend(self.tier)
         if hasattr(be, "get_device"):
             return be.get_device(self._key(i))
@@ -90,35 +147,102 @@ class DataUnit:
             yield self.partition(i)
 
     def nbytes(self) -> int:
+        if self.tier_manager is not None:
+            return sum(self.tier_manager.entry_nbytes(self._key(i))
+                       for i in range(self.num_partitions))
         be = self._backend(self.tier)
         return sum(be.nbytes(self._key(i)) for i in range(self.num_partitions))
+
+    # -- managed-hierarchy surface -------------------------------------
+    def residency(self) -> Dict[str, int]:
+        """Partition count per tier of *actual* residency."""
+        if self.tier_manager is None:
+            return {self.tier: self.num_partitions}
+        out: Dict[str, int] = {}
+        for i in range(self.num_partitions):
+            t = self.tier_manager.tier_of(self._key(i))
+            if t is not None:
+                out[t] = out.get(t, 0) + 1
+        return out
+
+    def resident_fraction(self, tier: str) -> float:
+        if self.num_partitions == 0:
+            return 0.0
+        if self.tier_manager is None:
+            return 1.0 if self.tier == tier else 0.0
+        return self.residency().get(tier, 0) / self.num_partitions
+
+    def pin(self) -> "DataUnit":
+        """Exempt every partition from eviction (Spark persist() analogue)."""
+        if self.tier_manager is not None:
+            self.tier_manager.pin([self._key(i)
+                                   for i in range(self.num_partitions)])
+        return self
+
+    def unpin(self) -> "DataUnit":
+        if self.tier_manager is not None:
+            self.tier_manager.unpin([self._key(i)
+                                     for i in range(self.num_partitions)])
+        return self
+
+    def prefetch(self, i: int, tier: str = "host") -> Optional[Future]:
+        """Async-stage partition i toward a hotter tier (no-op unmanaged,
+        out of range, or already at least that hot)."""
+        if self.tier_manager is None or not 0 <= i < self.num_partitions:
+            return None
+        return self.tier_manager.prefetch(self._key(i), tier)
 
     # ------------------------------------------------------------------
     def to_tier(self, tier: str, delete_source: bool = True) -> "DataUnit":
         """Stage every partition into another tier (paper: stage-in/out)."""
         if tier == self.tier:
             return self
-        src, dst = self._backend(self.tier), self._backend(tier)
         t0 = time.time()
         moved = 0
-        with self._lock:
-            for i in range(self.num_partitions):
-                arr = src.get(self._key(i))
-                dst.put(self._key(i), arr)
-                moved += int(np.asarray(arr).nbytes)
-                if delete_source:
-                    src.delete(self._key(i))
-            old = self.tier
-            self.tier = tier
+        if self.tier_manager is not None:
+            tm = self.tier_manager
+            with self._lock:
+                for i in range(self.num_partitions):
+                    key = self._key(i)
+                    tm.stage(key, tier, keep_source=not delete_source)
+                    moved += tm.entry_nbytes(key)
+                old, self.tier = self.tier, tier
+        else:
+            src, dst = self._backend(self.tier), self._backend(tier)
+            with self._lock:
+                for i in range(self.num_partitions):
+                    arr = src.get(self._key(i))
+                    dst.put(self._key(i), arr)
+                    moved += int(np.asarray(arr).nbytes)
+                    if delete_source:
+                        src.delete(self._key(i))
+                old, self.tier = self.tier, tier
         self.transfer_log.append({
             "from": old, "to": tier, "bytes": moved,
             "seconds": time.time() - t0})
         return self
 
+    def to_tier_async(self, tier: str) -> List[Future]:
+        """Queue every partition onto the background stager; returns the
+        per-partition futures. `tier` becomes the nominal placement at once;
+        reads stay consistent throughout because they follow actual
+        residency via the TierManager."""
+        if self.tier_manager is None:
+            self.to_tier(tier)
+            return []
+        futs = [self.tier_manager.stage_async(self._key(i), tier)
+                for i in range(self.num_partitions)]
+        self.tier = tier
+        return futs
+
     def replicate_to(self, tier: str) -> "DataUnit":
         return self.to_tier(tier, delete_source=False)
 
     def delete(self) -> None:
+        if self.tier_manager is not None:
+            for i in range(self.num_partitions):
+                self.tier_manager.delete(self._key(i))
+            return
         be = self._backend(self.tier)
         for i in range(self.num_partitions):
             be.delete(self._key(i))

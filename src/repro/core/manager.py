@@ -64,20 +64,27 @@ class ComputeDataManager:
 
     # ------------------------------------------------------------------
     def _device_tier_hits(self, pilot: PilotCompute,
-                          dus: Sequence[DataUnit]) -> int:
-        hits = 0
+                          dus: Sequence[DataUnit]) -> float:
+        """Fraction of each DU's partitions actually resident on the pilot's
+        devices. With a TierManager the *measured* residency is used (a DU
+        whose nominal tier is 'device' but whose partitions were demoted
+        under memory pressure earns no device credit); without one we fall
+        back to the DU's single tier field."""
+        hits = 0.0
         for du in dus:
-            if du.tier != "device":
+            frac = du.resident_fraction("device")
+            if frac <= 0.0:
                 continue
-            be = du.backends.get("device")
+            tm = getattr(du, "tier_manager", None)
+            be = (tm.backends if tm is not None else du.backends).get("device")
             mesh = getattr(be, "mesh", None)
             if mesh is None or pilot.mesh is None:
-                hits += 1  # device-resident, single address space
+                hits += frac  # device-resident, single address space
             else:
                 pilot_devs = {d.id for d in pilot.mesh.devices.flat}
                 du_devs = {d.id for d in mesh.devices.flat}
                 if du_devs & pilot_devs:
-                    hits += 1
+                    hits += frac
         return hits
 
     def score(self, pilot: PilotCompute, cu_desc: ComputeUnitDescription) -> float:
@@ -85,7 +92,7 @@ class ComputeDataManager:
         s = W_DEVICE * self._device_tier_hits(pilot, dus)
         if cu_desc.affinity and cu_desc.affinity == pilot.desc.affinity:
             s += W_AFFINITY
-        s += W_HOST * sum(1 for du in dus if du.tier == "host")
+        s += W_HOST * sum(du.resident_fraction("host") for du in dus)
         s -= W_QUEUE * pilot.utilization
         return s
 

@@ -45,13 +45,23 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
     # backend); only staging differs — so jit the map here too
     mfn = _jit_cached(map_fn) if jit_map else map_fn
     if manager is None:
-        # local fallback: still partition-parallel in semantics
-        vals = [mfn(jnp.asarray(p), *extra_args) for p in du.partitions()]
+        # local fallback: still partition-parallel in semantics; on managed
+        # cold tiers the background stager pulls partition i+1 toward host
+        # while i computes, so staging overlaps the map instead of gating it
+        vals = []
+        for i in range(du.num_partitions):
+            du.prefetch(i + 1)
+            vals.append(mfn(jnp.asarray(du.partition(i)), *extra_args))
         return functools.reduce(reduce_fn, vals)
     cus = []
+
+    def _task(idx):
+        du.prefetch(idx + 1)
+        return mfn(jnp.asarray(du.partition(idx)), *extra_args)
+
     for i in range(du.num_partitions):
         cus.append(manager.submit(ComputeUnitDescription(
-            fn=lambda idx=i: mfn(jnp.asarray(du.partition(idx)), *extra_args),
+            fn=lambda idx=i: _task(idx),
             input_data=(du,), affinity=du.affinity,
             name=f"{du.name}-map{i:04d}")))
     vals = [cu.result() for cu in cus]
@@ -77,8 +87,12 @@ def _map_reduce_device(du: DataUnit, map_fn, reduce_fn, pilot, extra_args,
             jitted = jax.jit(map_fn)
     else:
         jitted = map_fn
-    vals: List[Any] = [jitted(du.partition_device(i), *extra_args)
-                       for i in range(du.num_partitions)]
+    vals: List[Any] = []
+    for i in range(du.num_partitions):
+        # under a budgeted device tier some partitions sit one level colder;
+        # start their promotion while the current partition computes
+        du.prefetch(i + 1, "device")
+        vals.append(jitted(du.partition_device(i), *extra_args))
     # tree reduce (log depth; on real pods this maps to collective schedule)
     while len(vals) > 1:
         nxt = []

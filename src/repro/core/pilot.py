@@ -38,7 +38,8 @@ class PilotComputeDescription:
     num_devices: int = 1
     mesh_axes: Tuple[str, ...] = ("data",)
     mesh_shape: Tuple[int, ...] = ()
-    memory_gb: float = 0.0           # YARN-style memory ask (telemetry only)
+    memory_gb: float = 0.0           # YARN-style memory ask: becomes the
+    #                                  pilot TierManager's device-tier budget
     affinity: str = ""               # locality label
     queue_depth: int = 1024
     # simulated-backend knobs (provisioning latency per paper Fig. 6)
@@ -95,6 +96,9 @@ class PilotCompute:
         self._worker: Optional[threading.Thread] = None
         self.provision_time: float = 0.0
         self.failed_devices: set = set()   # runtime fault injection target
+        # the pilot's retained in-memory resources (Pilot-Data Memory): a
+        # TierManager whose device-tier budget is this pilot's HBM share
+        self.tier_manager = None           # Optional[TierManager]
 
     # ------------------------------------------------------------------
     def start(self):
@@ -156,6 +160,20 @@ class PilotCompute:
             self._jit_cache[key] = build()
         return self._jit_cache[key]
 
+    def attach_tier_manager(self, tm) -> "PilotCompute":
+        self.tier_manager = tm
+        return self
+
+    @property
+    def retained_memory_bytes(self) -> int:
+        """The pilot's retained in-memory allocation: the device-tier budget
+        of its TierManager (0 = unbounded/unmanaged)."""
+        if self.tier_manager is not None:
+            budget = self.tier_manager.budget("device")
+            if budget is not None:
+                return int(budget)
+        return int(self.desc.memory_gb * 2 ** 30)
+
     @property
     def utilization(self) -> float:
         with self._lock:
@@ -165,6 +183,8 @@ class PilotCompute:
         self._queue.put(None)
         if self._worker:
             self._worker.join(timeout=10)
+        if self.tier_manager is not None:
+            self.tier_manager.close()   # stop the stager threads
         self.state = State.CANCELED if self.state != State.DONE else self.state
 
     def wait_idle(self, timeout: float = 60.0):

@@ -1,0 +1,461 @@
+"""TierManager: a capacity-aware memory hierarchy over Pilot-Data tiers.
+
+The paper's central extension is Pilot-Data *Memory*: memory retained for a
+set of tasks so iterative analytics never re-stage inputs (§3.3, the 212x
+KMeans effect; the two-level-storage follow-up arXiv:1508.01847 gets the
+same win from a managed burst-buffer tier). The flat backends in
+repro.core.memory give the tiers themselves; this module adds the
+management the paper assigns to Pilot-Data:
+
+  * per-tier capacity budgets (bytes) — HBM and host RAM are finite;
+  * LRU eviction that *demotes* a partition to the next-colder tier
+    (device -> host -> object/file) instead of dropping it, so data is
+    never lost to pressure;
+  * access-heat tracking with automatic promotion of hot partitions
+    toward the device tier (the Spark `persist()` analogue);
+  * `pin`/`unpin` so a working set can be exempted from eviction;
+  * an async staging pipeline (thread-pool stager returning futures) so
+    stage-in/promotion overlaps with Compute-Unit execution.
+
+A partition (key) is resident in exactly one managed tier at a time.
+Moves copy to the destination *before* deleting the source and flip the
+residency metadata in between, so concurrent readers observe
+either-tier-consistent data and never a hole.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.memory import StorageBackend, TIERS
+
+
+class CapacityError(RuntimeError):
+    """A tier budget cannot be satisfied (value too large or all pinned)."""
+
+
+@dataclasses.dataclass
+class _Entry:
+    key: str
+    tier: str
+    nbytes: int
+    pinned: bool = False
+    heat: int = 0
+    last_access: int = 0
+
+
+class TierManager:
+    """Managed placement of named partitions across storage tiers.
+
+    backends — tier name -> StorageBackend (any subset of TIERS).
+    budgets  — tier name -> capacity in bytes; missing/None = unbounded.
+    promote_threshold — accesses after which a partition is asynchronously
+        promoted one tier hotter (0 disables auto-promotion).
+    """
+
+    def __init__(self, backends: Dict[str, StorageBackend],
+                 budgets: Optional[Dict[str, Optional[int]]] = None,
+                 *, promote_threshold: int = 4, max_workers: int = 2):
+        unknown = set(backends) - set(TIERS)
+        if unknown:
+            raise ValueError(f"unknown tiers {sorted(unknown)}")
+        self.backends = dict(backends)
+        # cold -> hot, restricted to the tiers that actually have backends
+        self.order: List[str] = [t for t in TIERS if t in backends]
+        self.budgets: Dict[str, Optional[int]] = {
+            t: (budgets or {}).get(t) for t in self.order}
+        self.promote_threshold = promote_threshold
+        self._entries: Dict[str, _Entry] = {}
+        self._usage: Dict[str, int] = {t: 0 for t in self.order}
+        self._peak: Dict[str, int] = {t: 0 for t in self.order}
+        self._clock = 0
+        self._meta = threading.RLock()
+        self._moving: set = set()      # keys with a copy in flight
+        self._inflight: Dict[tuple, Future] = {}
+        self._executor = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="tier-stager")
+        self.events: List[dict] = []   # telemetry: evict/demote/promote/stage
+
+    # -- introspection --------------------------------------------------
+    def budget(self, tier: str) -> Optional[int]:
+        return self.budgets.get(tier)
+
+    def usage(self, tier: str) -> int:
+        with self._meta:
+            return self._usage.get(tier, 0)
+
+    def peak_usage(self, tier: str) -> int:
+        with self._meta:
+            return self._peak.get(tier, 0)
+
+    def tier_of(self, key: str) -> Optional[str]:
+        with self._meta:
+            e = self._entries.get(key)
+            return e.tier if e else None
+
+    def entry_nbytes(self, key: str) -> int:
+        with self._meta:
+            return self._entries[key].nbytes
+
+    def resident_keys(self, tier: str) -> List[str]:
+        with self._meta:
+            return [k for k, e in self._entries.items() if e.tier == tier]
+
+    def stats(self) -> Dict[str, dict]:
+        with self._meta:
+            out = {}
+            for t in self.order:
+                ent = [e for e in self._entries.values() if e.tier == t]
+                out[t] = {"usage": self._usage[t], "peak": self._peak[t],
+                          "budget": self.budgets[t], "entries": len(ent),
+                          "pinned": sum(e.pinned for e in ent)}
+            return out
+
+    # -- internal helpers (meta lock held) ------------------------------
+    def _hotter(self, tier: str) -> Optional[str]:
+        i = self.order.index(tier)
+        return self.order[i + 1] if i + 1 < len(self.order) else None
+
+    def _colder(self, tier: str) -> Optional[str]:
+        i = self.order.index(tier)
+        return self.order[i - 1] if i > 0 else None
+
+    def _touch(self, e: _Entry) -> None:
+        self._clock += 1
+        e.last_access = self._clock
+        e.heat += 1
+
+    def _charge(self, tier: str, nbytes: int) -> None:
+        self._usage[tier] += nbytes
+        if self._usage[tier] > self._peak[tier]:
+            self._peak[tier] = self._usage[tier]
+
+    def _make_room(self, tier: str, need: int, exclude: frozenset) -> None:
+        """Demote LRU entries until `need` fits in `tier`'s budget."""
+        budget = self.budgets.get(tier)
+        if budget is None or need <= 0:
+            return
+        if need > budget:
+            raise CapacityError(
+                f"{need} bytes exceed the whole {tier!r} budget ({budget})")
+        while self._usage[tier] + need > budget:
+            victims = [e for e in self._entries.values()
+                       if e.tier == tier and not e.pinned
+                       and e.key not in exclude
+                       and e.key not in self._moving]
+            if not victims:
+                raise CapacityError(
+                    f"tier {tier!r} over budget and nothing evictable "
+                    f"(usage={self._usage[tier]}, need={need}, "
+                    f"budget={budget})")
+            victim = min(victims, key=lambda e: e.last_access)
+            self._demote_locked(victim, exclude)
+
+    def _demote_locked(self, e: _Entry, exclude: frozenset) -> None:
+        dst = self._colder(e.tier)
+        if dst is None:
+            raise CapacityError(
+                f"cannot evict {e.key!r}: {e.tier!r} is the coldest tier")
+        src = e.tier
+        # recursive: demotion may itself displace entries in the colder tier
+        self._make_room(dst, e.nbytes, exclude | {e.key})
+        val = self.backends[src].get(e.key)
+        self._charge(dst, e.nbytes)
+        self.backends[dst].put(e.key, val)
+        e.tier = dst
+        e.heat = 0          # demoted data must re-earn promotion
+        self._usage[src] -= e.nbytes
+        self.backends[src].delete(e.key)
+        self.events.append({"op": "demote", "key": e.key, "from": src,
+                            "to": dst, "bytes": e.nbytes})
+
+    # -- placement ------------------------------------------------------
+    def put(self, key: str, value, tier: str, pinned: bool = False) -> None:
+        """Store `value` in `tier`, evicting (demoting) LRU data to fit.
+
+        On CapacityError nothing has changed: a pre-existing copy of the
+        key (any tier) is still resident and correctly accounted.
+        """
+        if tier not in self.backends:
+            raise KeyError(f"no backend for tier {tier!r}")
+        arr = value if hasattr(value, "nbytes") else np.asarray(value)
+        nbytes = int(arr.nbytes)
+        deadline = time.monotonic() + 30.0
+        while True:
+            with self._meta:
+                if key not in self._moving:
+                    self._put_locked(key, arr, nbytes, tier, pinned)
+                    return
+            if time.monotonic() > deadline:
+                raise RuntimeError(f"staging contention on {key!r}")
+            time.sleep(0.001)   # key mid-move; wait for the stager
+
+    def _put_locked(self, key: str, arr, nbytes: int, tier: str,
+                    pinned: bool) -> None:
+        old = self._entries.get(key)
+        freed = old.nbytes if (old is not None and old.tier == tier) else 0
+        # reserve before touching the old copy, so a CapacityError here
+        # leaves it intact (the "never lost to pressure" guarantee)
+        self._make_room(tier, nbytes - freed, frozenset({key}))
+        self._usage[tier] -= freed
+        self._charge(tier, nbytes)
+        try:
+            self.backends[tier].put(key, arr)
+        except Exception:
+            self._usage[tier] += freed - nbytes
+            raise
+        if old is not None and old.tier != tier:
+            self._usage[old.tier] -= old.nbytes
+            self.backends[old.tier].delete(key)
+        self._clock += 1
+        self._entries[key] = _Entry(key, tier, nbytes, pinned=pinned,
+                                    last_access=self._clock)
+
+    def delete(self, key: str) -> None:
+        with self._meta:
+            e = self._entries.pop(key, None)
+            if e is None:
+                return
+            self._usage[e.tier] -= e.nbytes
+            self.backends[e.tier].delete(key)
+
+    def adopt(self, key: str, tier: str, nbytes: Optional[int] = None,
+              pinned: bool = False) -> None:
+        """Register data already sitting in a backend (e.g. a pre-existing
+        DataUnit) so it participates in budgets/eviction/heat."""
+        if nbytes is None:
+            nbytes = self.backends[tier].nbytes(key)
+        with self._meta:
+            if key in self._entries:
+                return
+            self._make_room(tier, nbytes, frozenset({key}))
+            self._charge(tier, nbytes)
+            self._clock += 1
+            self._entries[key] = _Entry(key, tier, int(nbytes), pinned=pinned,
+                                        last_access=self._clock)
+
+    # -- access ---------------------------------------------------------
+    def get(self, key: str) -> np.ndarray:
+        """Read a partition from wherever it currently resides.
+
+        Tolerates concurrent staging: a move copies to the destination,
+        flips residency, then deletes the source, so on a miss we re-read
+        the (updated) residency and retry.
+        """
+        for _ in range(8):
+            with self._meta:
+                e = self._entries.get(key)
+                tier = e.tier if e else None
+            if tier is None:
+                break
+            try:
+                val = self.backends[tier].get(key)
+            except (KeyError, FileNotFoundError):
+                continue    # raced with a move; residency will have flipped
+            self._after_read(key)
+            return val
+        # last resort: scan every backend (covers unmanaged stragglers)
+        for tier in reversed(self.order):
+            be = self.backends[tier]
+            try:
+                if be.exists(key):
+                    val = be.get(key)
+                    self._after_read(key)
+                    return val
+            except (KeyError, FileNotFoundError):
+                continue
+        raise KeyError(key)
+
+    def get_device(self, key: str):
+        """Device-resident handle if HBM holds the key; else staged read."""
+        import jax
+        with self._meta:
+            e = self._entries.get(key)
+            tier = e.tier if e else None
+        be = self.backends.get("device")
+        if tier == "device" and be is not None and hasattr(be, "get_device"):
+            try:
+                arr = be.get_device(key)
+                self._after_read(key)
+                return arr
+            except KeyError:
+                pass
+            except FileNotFoundError:
+                pass
+        return jax.device_put(np.asarray(self.get(key)))
+
+    def _after_read(self, key: str) -> None:
+        promote_to = None
+        with self._meta:
+            e = self._entries.get(key)
+            if e is None:
+                return
+            self._touch(e)
+            if self.promote_threshold and e.heat >= self.promote_threshold:
+                hot = self._hotter(e.tier)
+                budget = self.budgets.get(hot) if hot else None
+                fits = budget is None or e.nbytes <= budget
+                if hot is not None and fits:
+                    e.heat = 0
+                    promote_to = hot
+        if promote_to is not None:
+            self.stage_async(key, promote_to)
+
+    # -- pinning --------------------------------------------------------
+    def pin(self, keys: Iterable[str] | str) -> None:
+        self._set_pinned(keys, True)
+
+    def unpin(self, keys: Iterable[str] | str) -> None:
+        self._set_pinned(keys, False)
+
+    def _set_pinned(self, keys, flag: bool) -> None:
+        if isinstance(keys, str):
+            keys = (keys,)
+        with self._meta:
+            for k in keys:
+                e = self._entries.get(k)
+                if e is not None:
+                    e.pinned = flag
+
+    # -- staging --------------------------------------------------------
+    def stage(self, key: str, tier: str, keep_source: bool = False) -> str:
+        """Synchronously move `key` to `tier` (promotion or demotion).
+
+        With keep_source=True the source copy is left behind (untracked,
+        cold-tier cache); residency metadata moves to the destination.
+        Returns the tier the key resides in afterwards.
+
+        The copy itself runs *outside* the metadata lock (so staging
+        overlaps concurrent reads/compute); the lock is taken only to
+        reserve destination capacity and to flip residency. Concurrent
+        stages of the same key serialize on the `_moving` marker.
+        """
+        if tier not in self.backends:
+            raise KeyError(f"no backend for tier {tier!r}")
+        deadline = time.monotonic() + 30.0
+        while True:
+            with self._meta:
+                e = self._entries.get(key)
+                if e is None:
+                    raise KeyError(key)
+                if key not in self._moving:
+                    src = e.tier
+                    if src == tier:
+                        self._touch(e)
+                        return tier
+                    nbytes = e.nbytes
+                    self._make_room(tier, nbytes, frozenset({key}))
+                    self._charge(tier, nbytes)
+                    self._moving.add(key)
+                    break
+            if time.monotonic() > deadline:
+                raise RuntimeError(f"staging contention on {key!r}")
+            time.sleep(0.001)   # another mover has this key; wait it out
+        try:
+            val = self.backends[src].get(key)      # outside the lock:
+            self.backends[tier].put(key, val)      # reads proceed meanwhile
+        except Exception:
+            with self._meta:
+                self._usage[tier] -= nbytes
+                self._moving.discard(key)
+            raise
+        with self._meta:
+            e = self._entries.get(key)
+            if e is None:
+                # deleted mid-move: drop the staged copy + reservation
+                self._usage[tier] -= nbytes
+                self.backends[tier].delete(key)
+                self._moving.discard(key)
+                raise KeyError(key)
+            e.tier = tier
+            self._touch(e)
+            self._usage[src] -= nbytes
+            if not keep_source:
+                self.backends[src].delete(key)
+            self._moving.discard(key)
+            hot = self.order.index(tier) > self.order.index(src)
+            self.events.append({"op": "promote" if hot else "demote",
+                                "key": key, "from": src, "to": tier,
+                                "bytes": nbytes})
+        return tier
+
+    def stage_async(self, key: str, tier: str,
+                    keep_source: bool = False) -> Future:
+        """Queue a move on the background stager; returns a future resolving
+        to the tier the key ends up in (the current tier if the move was
+        refused for capacity)."""
+        with self._meta:
+            fut = self._inflight.get((key, tier))
+            if fut is not None and not fut.done():
+                return fut
+            for k in [k for k, f in self._inflight.items() if f.done()]:
+                del self._inflight[k]   # don't retain completed stages
+            fut = self._executor.submit(
+                self._stage_task, key, tier, keep_source)
+            self._inflight[(key, tier)] = fut
+            return fut
+
+    def _stage_task(self, key: str, tier: str, keep_source: bool) -> str:
+        try:
+            return self.stage(key, tier, keep_source=keep_source)
+        except CapacityError:
+            with self._meta:
+                self.events.append({"op": "stage-refused", "key": key,
+                                    "to": tier})
+            return self.tier_of(key) or tier
+        except KeyError:
+            return tier   # key deleted while queued; nothing to do
+
+    def prefetch(self, key: str, tier: str) -> Optional[Future]:
+        """Async promotion toward `tier` if the key is currently colder."""
+        with self._meta:
+            e = self._entries.get(key)
+            if e is None or tier not in self.backends:
+                return None
+            if self.order.index(e.tier) >= self.order.index(tier):
+                return None
+        return self.stage_async(key, tier)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Wait for every queued stage to finish (tests/benchmarks)."""
+        with self._meta:
+            futs = list(self._inflight.values())
+        for f in futs:
+            f.result(timeout)
+
+    def close(self) -> None:
+        self._executor.shutdown(wait=True)
+
+    def __repr__(self) -> str:
+        parts = ", ".join(
+            f"{t}={self._usage[t]}/{self.budgets[t] or 'inf'}"
+            for t in self.order)
+        return f"TierManager({parts})"
+
+
+def make_tier_manager(*, device_budget: Optional[int] = None,
+                      host_budget: Optional[int] = None,
+                      root: Optional[str] = None, mesh=None,
+                      promote_threshold: int = 4) -> TierManager:
+    """Convenience: a host(+file)(+device) hierarchy with common budgets.
+
+    Without `root` the coldest tier is host RAM (no disk side effects);
+    with `root` a file tier is added below it.
+    """
+    from repro.core.memory import make_backend
+    backends: Dict[str, StorageBackend] = {}
+    if root is not None:
+        backends["file"] = make_backend("file", root=root)
+    backends["host"] = make_backend("host")
+    backends["device"] = make_backend("device", mesh=mesh)
+    budgets: Dict[str, Optional[int]] = {}
+    if device_budget is not None:
+        budgets["device"] = int(device_budget)
+    if host_budget is not None:
+        budgets["host"] = int(host_budget)
+    return TierManager(backends, budgets, promote_threshold=promote_threshold)

@@ -1,0 +1,12 @@
+"""jax-version compatibility for Pallas TPU kernels.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+kernels import the name from here so they run on both (the container ships
+jax 0.4.37).
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:  # jax 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams

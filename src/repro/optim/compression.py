@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.launch.mesh import compat_shard_map
 from repro.optim.quant import QTensor, dequantize, quantize
 
 
@@ -61,10 +62,9 @@ def compressed_pod_mean(grads, residuals, mesh: Mesh, axis: str = "pod",
         return gs, rs
 
     # manual over the pod axis only; data/model stay auto-sharded inside
-    manual = jax.shard_map(
-        prog, mesh=mesh, axis_names=frozenset({axis}),
-        in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False)
+    manual = compat_shard_map(
+        prog, mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        axis_names=frozenset({axis}))
     return manual(grads, residuals)
 
 

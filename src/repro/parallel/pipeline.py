@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.launch.mesh import compat_shard_map
+
 
 def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
     return (num_stages - 1) / (num_microbatches + num_stages - 1)
@@ -72,7 +74,6 @@ def pipeline_forward(layer_fn: Callable, stage_params, x_micro: jax.Array,
         return outs
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(stage_prog, mesh=mesh,
-                       in_specs=(spec_params, P()), out_specs=P(),
-                       check_vma=False)
+    fn = compat_shard_map(stage_prog, mesh,
+                          in_specs=(spec_params, P()), out_specs=P())
     return fn(stage_params, x_micro)

@@ -16,8 +16,9 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding
 
+from repro.launch.mesh import mesh_axis_types
 from repro.parallel.sharding import AxisRules, resolve_pspec
 
 
@@ -43,8 +44,7 @@ def plan_mesh(num_devices: int, model_parallel: int,
 def build_mesh(devices: Sequence, plan: MeshPlan) -> Mesh:
     used = int(np.prod(plan.shape))
     arr = np.array(list(devices)[:used]).reshape(plan.shape)
-    return Mesh(arr, plan.axes,
-                axis_types=(AxisType.Auto,) * len(plan.axes))
+    return Mesh(arr, plan.axes, **mesh_axis_types(len(plan.axes)))
 
 
 def reshard_state(host_state, spec_tree, mesh: Mesh, rules: AxisRules):

@@ -62,8 +62,8 @@ def test_elastic_restore_with_new_sharding(tmp_path):
     ckpt = CheckpointManager(tmp_path)
     state = _state()
     ckpt.save(1, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
         state)

@@ -1,0 +1,73 @@
+"""ComputeDataManager scheduling against *measured* tier residency, late
+binding timeout, and retry-after-pilot-failure."""
+import numpy as np
+import pytest
+
+from repro.core import (ComputeDataManager, ComputeUnitDescription, DataUnit,
+                        PilotComputeDescription, PilotComputeService,
+                        TierManager, make_backend)
+from repro.core.backends.base import register_backend
+from repro.core.backends.simulated import FaultPolicy, SimulatedClusterBackend
+
+
+@pytest.fixture
+def service():
+    svc = PilotComputeService()
+    yield svc
+    svc.cancel_all()
+
+
+def _managed_du(name, tmp_path, device_budget, parts=4):
+    tm = TierManager({"host": make_backend("host"),
+                      "device": make_backend("device")},
+                     {"device": device_budget}, promote_threshold=0)
+    arr = np.ones((parts * 256, 4), np.float32)
+    du = DataUnit.from_array(name, arr, parts, tm.backends, tier="device",
+                             tier_manager=tm)
+    return du
+
+
+def test_score_follows_actual_residency_not_nominal_tier(service, tmp_path):
+    pilot = service.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    manager = ComputeDataManager(service)
+    part_bytes = 256 * 4 * 4
+    du_resident = _managed_du("res", tmp_path, device_budget=None)
+    du_demoted = _managed_du("dem", tmp_path, device_budget=part_bytes)
+    # both claim tier == 'device'; only one actually holds partitions there
+    assert du_resident.tier == du_demoted.tier == "device"
+    assert du_resident.resident_fraction("device") == 1.0
+    assert du_demoted.resident_fraction("device") < 1.0
+    s_res = manager.score(pilot, ComputeUnitDescription(
+        fn=lambda: 0, input_data=(du_resident,)))
+    s_dem = manager.score(pilot, ComputeUnitDescription(
+        fn=lambda: 0, input_data=(du_demoted,)))
+    assert s_res > s_dem
+    # partial residency scores between fully-device and fully-host
+    du_half = _managed_du("half", tmp_path, device_budget=2 * part_bytes)
+    assert du_half.resident_fraction("device") == 0.5
+    s_half = manager.score(pilot, ComputeUnitDescription(
+        fn=lambda: 0, input_data=(du_half,)))
+    assert s_res > s_half > manager.score(pilot, ComputeUnitDescription(
+        fn=lambda: 0,
+        input_data=(du_resident.to_tier("host"),)))
+
+
+def test_select_pilot_timeout_raises(service):
+    manager = ComputeDataManager(service)
+    with pytest.raises(TimeoutError):
+        manager.select_pilot(ComputeUnitDescription(fn=lambda: 0),
+                             timeout=0.2)
+
+
+def test_result_with_retry_resubmits_after_pilot_failure(service):
+    register_backend(SimulatedClusterBackend(
+        substrate="slurm", policy=FaultPolicy(fail_devices_at=0)))
+    service.submit_pilot(PilotComputeDescription(backend="simulated"))
+    service.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    manager = ComputeDataManager(service)
+    n_before = len(manager.history)
+    out = manager.result_with_retry(
+        ComputeUnitDescription(fn=lambda: "recovered"), retries=3)
+    assert out == "recovered"
+    # at least one resubmission happened
+    assert len(manager.history) - n_before >= 2

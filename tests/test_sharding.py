@@ -9,6 +9,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax
+from repro.launch.mesh import make_abstract_mesh
 from repro.parallel.sharding import AxisRules, resolve_pspec
 
 SRC = Path(__file__).resolve().parents[1] / "src"
@@ -16,7 +17,7 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 
 def _fake_mesh(shape, axes):
     """Mesh over abstract devices (no allocation) for spec resolution."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    return make_abstract_mesh(shape, axes)
 
 
 LOGICALS = ["batch", "seq", "embed", "heads", "kv_heads", "mlp", "vocab",

@@ -1,0 +1,183 @@
+"""TierManager: budgets, LRU demotion, pinning, heat promotion, async
+staging, and the working-set-exceeds-memory KMeans acceptance scenario."""
+import numpy as np
+import pytest
+
+from repro.core import (CapacityError, DataUnit, PilotComputeDescription,
+                        PilotComputeService, TierManager, kmeans, make_backend,
+                        make_blobs)
+
+KB = 1024
+
+
+def _tm(tmp_path, device_budget=None, host_budget=None, promote_threshold=0):
+    backends = {"file": make_backend("file", root=tmp_path / "file"),
+                "host": make_backend("host"),
+                "device": make_backend("device")}
+    return TierManager(backends,
+                       {"device": device_budget, "host": host_budget},
+                       promote_threshold=promote_threshold)
+
+
+def _arr(i, kb=1):
+    return np.full((kb * KB // 4,), i, dtype=np.float32)
+
+
+def test_device_budget_never_exceeded(tmp_path):
+    tm = _tm(tmp_path, device_budget=4 * KB)
+    for i in range(8):
+        tm.put(f"p{i}", _arr(i), "device")
+        assert tm.usage("device") <= 4 * KB
+    assert tm.peak_usage("device") <= 4 * KB
+    # nothing was dropped: every partition readable, contents intact
+    for i in range(8):
+        np.testing.assert_array_equal(tm.get(f"p{i}"), _arr(i))
+    # the overflow went one tier colder, not to the floor
+    assert len(tm.resident_keys("device")) == 4
+    assert len(tm.resident_keys("host")) == 4
+
+
+def test_lru_demotion_order(tmp_path):
+    tm = _tm(tmp_path, device_budget=3 * KB)
+    for k in ("a", "b", "c"):
+        tm.put(k, _arr(0), "device")
+    tm.get("a")                      # a is now hotter than b
+    tm.put("d", _arr(0), "device")   # needs room: LRU victim must be b
+    assert tm.tier_of("b") == "host"
+    for k in ("a", "c", "d"):
+        assert tm.tier_of(k) == "device"
+
+
+def test_pin_survives_eviction_pressure(tmp_path):
+    tm = _tm(tmp_path, device_budget=2 * KB)
+    tm.put("pinned", _arr(7), "device", pinned=True)
+    for i in range(4):
+        tm.put(f"x{i}", _arr(i), "device")
+    assert tm.tier_of("pinned") == "device"
+    np.testing.assert_array_equal(tm.get("pinned"), _arr(7))
+    # when only pinned data remains and the newcomer cannot fit: explicit error
+    with pytest.raises(CapacityError):
+        tm.put("big", _arr(0, kb=2), "device")
+    tm.unpin("pinned")
+    tm.put("big", _arr(0, kb=2), "device")       # now evictable
+    assert tm.tier_of("pinned") == "host"
+
+
+def test_put_replacement_capacity_error_keeps_old_copy(tmp_path):
+    """A refused re-placement must leave the pre-existing copy resident."""
+    tm = _tm(tmp_path, device_budget=1 * KB)
+    tm.put("k", _arr(1), "host")
+    with pytest.raises(CapacityError):
+        tm.put("k", _arr(2, kb=2), "device")
+    assert tm.tier_of("k") == "host"
+    np.testing.assert_array_equal(tm.get("k"), _arr(1))
+
+
+def test_put_same_tier_overflow_keeps_accounting(tmp_path):
+    """A refused same-tier overwrite must not understate tier usage."""
+    tm = _tm(tmp_path, host_budget=1 * KB)
+    tm.put("a", _arr(1), "host")
+    with pytest.raises(CapacityError):
+        tm.put("a", _arr(2, kb=2), "host")
+    assert tm.usage("host") == 1 * KB
+    assert tm.tier_of("a") == "host"
+    tm.put("b", _arr(3), "host")          # budget still enforced: 'a' demotes
+    assert tm.usage("host") <= 1 * KB
+    assert tm.tier_of("a") == "file"
+    np.testing.assert_array_equal(tm.get("a"), _arr(1))
+
+
+def test_oversized_value_raises(tmp_path):
+    tm = _tm(tmp_path, device_budget=1 * KB)
+    with pytest.raises(CapacityError):
+        tm.put("big", _arr(0, kb=2), "device")
+
+
+def test_promote_demote_roundtrip_preserves_contents(tmp_path):
+    tm = _tm(tmp_path)
+    val = np.random.default_rng(0).normal(size=(257, 3)).astype(np.float32)
+    tm.put("x", val, "file")
+    for tier in ("host", "device", "host", "file", "device", "file"):
+        assert tm.stage("x", tier) == tier
+        assert tm.tier_of("x") == tier
+        np.testing.assert_array_equal(tm.get("x"), val)
+
+
+def test_async_stage_future_resolves(tmp_path):
+    tm = _tm(tmp_path)
+    tm.put("x", _arr(3), "file")
+    fut = tm.stage_async("x", "device")
+    assert fut.result(timeout=10) == "device"
+    assert tm.tier_of("x") == "device"
+    np.testing.assert_array_equal(tm.get("x"), _arr(3))
+    # a capacity-refused stage resolves (to the unchanged tier), not raises
+    tm2 = _tm(tmp_path / "b", device_budget=1 * KB)
+    tm2.put("big", _arr(0, kb=2), "host")
+    assert tm2.stage_async("big", "device").result(timeout=10) == "host"
+
+
+def test_heat_promotes_hot_partition_file_to_device(tmp_path):
+    tm = _tm(tmp_path, promote_threshold=2)
+    tm.put("hot", _arr(5), "file")
+    for _ in range(4):
+        tm.get("hot")
+        tm.drain(timeout=10)
+    assert tm.tier_of("hot") == "device"     # file -> host -> device
+    np.testing.assert_array_equal(tm.get("hot"), _arr(5))
+
+
+def test_dataunit_pin_and_residency(tmp_path):
+    tm = _tm(tmp_path, device_budget=4 * KB)
+    parts = [_arr(i) for i in range(4)]
+    du = DataUnit.from_partitions("du", parts, tm.backends, tier="device",
+                                  tier_manager=tm)
+    assert du.resident_fraction("device") == 1.0
+    du.pin()
+    # pressure from another dataset cannot displace the pinned DU
+    for i in range(4):
+        with pytest.raises(CapacityError):
+            tm.put(f"other{i}", _arr(i), "device")
+    assert du.resident_fraction("device") == 1.0
+    du.unpin()
+    tm.put("other", _arr(0), "device")
+    assert du.resident_fraction("device") == 0.75
+
+
+def test_kmeans_working_set_2x_device_budget(tmp_path):
+    """Acceptance: device budget N, KMeans working set 2N — the budget is
+    never exceeded, the run completes, and numerics match an unmanaged run."""
+    pts, _ = make_blobs(16_000, 8, d=8, seed=2)
+    parts = 8
+    part_bytes = pts.nbytes // parts
+    budget = 4 * part_bytes + part_bytes // 2    # fits half the partitions
+    tm = _tm(tmp_path, device_budget=budget, promote_threshold=2)
+    du = DataUnit.from_array("pts2x", pts, parts, tm.backends, tier="device",
+                             tier_manager=tm)
+    res = du.residency()
+    assert res.get("device", 0) < parts          # pressure demoted some
+    r = kmeans(du, k=8, iters=3, seed=0)
+    tm.drain(timeout=30)
+    assert tm.peak_usage("device") <= budget
+    assert np.isfinite(r.sse_history).all()
+    # same numerics as a plain unmanaged host-tier run
+    backends = {"host": make_backend("host"), "device": make_backend("device")}
+    du_ref = DataUnit.from_array("ref", pts, parts, backends, tier="host")
+    r_ref = kmeans(du_ref, k=8, iters=3, seed=0)
+    np.testing.assert_allclose(r.sse_history, r_ref.sse_history, rtol=1e-4)
+
+
+def test_pilot_exposes_retained_memory(tmp_path):
+    svc = PilotComputeService()
+    try:
+        pilot = svc.submit_pilot(PilotComputeDescription(
+            backend="inprocess", memory_gb=0.25))
+        assert pilot.tier_manager is not None
+        assert pilot.retained_memory_bytes == int(0.25 * 2 ** 30)
+        assert pilot.tier_manager.budget("device") == int(0.25 * 2 ** 30)
+        # DUs created through the pilot's manager land in its device tier
+        du = DataUnit.from_array("w", np.ones((64, 4), np.float32), 2,
+                                 pilot.tier_manager.backends, tier="device",
+                                 tier_manager=pilot.tier_manager)
+        assert du.resident_fraction("device") == 1.0
+    finally:
+        svc.cancel_all()

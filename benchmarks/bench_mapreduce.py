@@ -1,0 +1,186 @@
+"""Pipelined map_reduce engine vs PR 1's sequential i+1 prefetch, and
+GDSF vs LRU eviction on a skewed-size working set.
+
+Scenario A (the tentpole's acceptance case): iterative KMeans whose working
+set is 2x the device-tier budget, with the overflow spilling through a
+1.5-partition host tier onto a (simulated, read-slow) disk tier — every
+iteration is a sequential scan against LRU, the adversarial case where all
+partitions restage each pass.  The sequential engine overlaps exactly one
+stage-in with compute; the depth-k engine keeps `DEPTH` stage-ins in flight
+on a `DEPTH`-worker stager and fuses the partial reduction, so the same
+scan is bounded by staging-bandwidth/DEPTH instead of staging-latency.
+
+Scenario B: 8 small-hot partitions + rotating large-cold scans against one
+device budget.  LRU demotes the small hot set to the throttled disk the
+moment a recently-touched scan partition needs room; GDSF (frequency x
+restage-cost / size) evicts the large cold scan instead, so the hot set
+never pays the disk.
+
+Rows: bench_mapreduce.<variant>,us_per_run,derived; machine-readable rows
+(wall seconds, bytes staged, evictions) land in the BENCH_*.json artifact
+via benchmarks.common.record.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, record
+
+ITERS = 3
+DEPTH = 4          # pipeline depth = stager pool width
+
+
+def _cold_profile(part_bytes: int, read_ms: float = 12.0,
+                  write_ms: float = 0.3):
+    """A disk whose reads cost ~read_ms per partition and writes ~write_ms
+    (restage-dominated, so overlap is what the benchmark measures)."""
+    from repro.core.memory import TierProfile
+    return TierProfile("bench_cold_disk", simulate=True, latency=1e-3,
+                       read_bw=part_bytes / (read_ms * 1e-3),
+                       write_bw=part_bytes / (write_ms * 1e-3))
+
+
+def _overbudget_setup(root: Path, pts, parts: int, policy: str = "lru"):
+    """Fresh 2x-over-budget hierarchy: device holds half the partitions,
+    host holds ~1.5, the rest sit on the simulated cold disk."""
+    from repro.core import DataUnit, TierManager, make_backend
+    from repro.core.memory import FileBackend
+
+    part_bytes = pts.nbytes // parts
+    tm = TierManager(
+        {"file": FileBackend(root, _cold_profile(part_bytes)),
+         "host": make_backend("host"),
+         "device": make_backend("device")},
+        {"device": (parts // 2) * part_bytes + part_bytes // 2,
+         "host": part_bytes + part_bytes // 2},
+        promote_threshold=0, max_workers=DEPTH, policy=policy)
+    du = DataUnit.from_array("mr-bench", pts, parts, tm.backends,
+                             tier="device", tier_manager=tm)
+    return tm, du
+
+
+def _staged(tm) -> dict:
+    s = tm.event_summary()
+    return {"bytes_staged": s["bytes_promoted"] + s["bytes_demoted"],
+            "evictions": s["demotions"]}
+
+
+def _bench_pipelined_vs_sequential(quick: bool, workdir: Path) -> float:
+    from repro.core import kmeans, make_backend, make_blobs
+    from repro.core.data import DataUnit
+
+    n, parts = (8_000, 8) if quick else (32_000, 16)
+    k = 8
+    pts, _ = make_blobs(n, k, d=16, seed=0)
+
+    # warm the jit cache so neither engine pays compile inside the timer
+    warm = DataUnit.from_array(
+        "warm", pts[: n // parts], 1,
+        {"host": make_backend("host"), "device": make_backend("device")},
+        tier="device")
+    kmeans(warm, k=k, iters=1, seed=0)
+
+    results = {}
+    for mode, pipeline in (("sequential", False), ("pipelined", True)):
+        tm, du = _overbudget_setup(workdir / mode, pts, parts)
+        try:
+            t0 = time.perf_counter()
+            r = kmeans(du, k=k, iters=ITERS, seed=0, pipeline=pipeline,
+                       prefetch_depth=DEPTH)
+            wall = time.perf_counter() - t0
+            tm.drain(timeout=60)
+            assert np.isfinite(r.sse_history).all()
+            results[mode] = (wall, _staged(tm), r.sse_history[-1])
+        finally:
+            tm.close()
+
+    t_seq, staged_seq, sse_seq = results["sequential"]
+    t_pipe, staged_pipe, sse_pipe = results["pipelined"]
+    np.testing.assert_allclose(sse_pipe, sse_seq, rtol=1e-3)
+    speedup = t_seq / max(t_pipe, 1e-9)
+    emit("bench_mapreduce.sequential[sim]", t_seq, f"sse={sse_seq:.3e}")
+    emit("bench_mapreduce.pipelined[sim]", t_pipe,
+         f"speedup={speedup:.2f}x depth={DEPTH}")
+    record("bench_mapreduce.sequential", seconds=t_seq, **staged_seq)
+    record("bench_mapreduce.pipelined", seconds=t_pipe, speedup=speedup,
+           depth=DEPTH, **staged_pipe)
+    if speedup < 1.5:
+        emit("bench_mapreduce.WARNING", 0.0,
+             f"pipelined speedup {speedup:.2f}x below the 1.5x target")
+    return speedup
+
+
+def _bench_gdsf_vs_lru(quick: bool, workdir: Path) -> float:
+    """Skewed-size working set: hot smalls + rotating large cold scans."""
+    from repro.core import TierManager, make_backend
+    from repro.core.memory import FileBackend
+
+    small_kb = 8 if quick else 32
+    small_bytes = small_kb * 1024
+    large_bytes = 8 * small_bytes
+    n_small, n_large = 8, 4
+    rounds = 6
+    budget = n_small * small_bytes + large_bytes + small_bytes // 2
+
+    results = {}
+    for policy in ("lru", "gdsf"):
+        tm = TierManager(
+            {"file": FileBackend(workdir / policy,
+                                 _cold_profile(large_bytes)),
+             "device": make_backend("device")},
+            {"device": budget}, promote_threshold=0, policy=policy)
+        try:
+            for i in range(n_small):
+                tm.put(f"hot{i}", np.zeros(small_bytes // 4, np.float32),
+                       "device")
+            for j in range(n_large):
+                tm.put(f"scan{j}", np.zeros(large_bytes // 4, np.float32),
+                       "file")
+            t0 = time.perf_counter()
+            for r in range(rounds):
+                big = f"scan{r % n_large}"
+                tm.stage(big, "device")
+                tm.get(big)
+                for _ in range(2):
+                    for i in range(n_small):
+                        tm.get(f"hot{i}")
+                tm.get(big)     # the scan output is re-read last (MRU)
+            wall = time.perf_counter() - t0
+            results[policy] = (wall, _staged(tm))
+        finally:
+            tm.close()
+
+    t_lru, staged_lru = results["lru"]
+    t_gdsf, staged_gdsf = results["gdsf"]
+    speedup = t_lru / max(t_gdsf, 1e-9)
+    emit("bench_mapreduce.evict_lru[sim]", t_lru,
+         f"evictions={staged_lru['evictions']}")
+    emit("bench_mapreduce.evict_gdsf[sim]", t_gdsf,
+         f"speedup_vs_lru={speedup:.2f}x "
+         f"evictions={staged_gdsf['evictions']}")
+    record("bench_mapreduce.evict_lru", seconds=t_lru, **staged_lru)
+    record("bench_mapreduce.evict_gdsf", seconds=t_gdsf,
+           speedup_vs_lru=speedup, **staged_gdsf)
+    if speedup < 1.0:
+        emit("bench_mapreduce.WARNING", 0.0,
+             f"GDSF slower than LRU ({speedup:.2f}x)")
+    return speedup
+
+
+def run(quick: bool = False) -> None:
+    root = Path(tempfile.mkdtemp(prefix="bench_mapreduce_"))
+    try:
+        _bench_pipelined_vs_sequential(quick, root)
+        _bench_gdsf_vs_lru(quick, root)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -18,7 +18,7 @@ import tempfile
 import time
 from pathlib import Path
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record
 
 ITERS = 4
 K = 8
@@ -70,7 +70,15 @@ def run(quick: bool = False) -> None:
              f"speedup={speedup:.1f}x")
         emit("bench_tiering.device_peak", 0.0,
              f"peak/budget={tm.peak_usage('device')}/{budget}")
+        summary = tm.event_summary()
+        record("bench_tiering.file_baseline", seconds=t_file)
+        record("bench_tiering.managed_2x_budget", seconds=t_tm,
+               speedup=speedup, evictions=summary["demotions"],
+               bytes_staged=(summary["bytes_promoted"]
+                             + summary["bytes_demoted"]),
+               device_peak=tm.peak_usage("device"), device_budget=budget)
         assert tm.peak_usage("device") <= budget, "device budget exceeded"
+        tm.close()
         if speedup <= 1.0:
             emit("bench_tiering.WARNING", 0.0,
                  "managed hierarchy did not beat file baseline")

@@ -1,17 +1,25 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing, CSV emission, JSON records.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (derived = the
-figure-relevant quantity: bandwidth, speedup, roofline term, ...).
+figure-relevant quantity: bandwidth, speedup, roofline term, ...) and may
+additionally `record()` machine-readable rows; `write_json()` dumps the
+accumulated records (per-benchmark wall time, bytes staged, evictions, ...)
+to a ``BENCH_*.json`` artifact so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import platform
 import sys
 import time
 from pathlib import Path
+from typing import List, Optional
 
 SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+_RECORDS: List[dict] = []
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
@@ -27,3 +35,30 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
 
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def record(name: str, **fields) -> dict:
+    """Accumulate one machine-readable benchmark row (seconds, bytes
+    staged, evictions, speedups, ...) for the JSON artifact."""
+    row = {"name": name}
+    row.update(fields)
+    _RECORDS.append(row)
+    return row
+
+
+def records() -> List[dict]:
+    return list(_RECORDS)
+
+
+def write_json(path: str | Path, meta: Optional[dict] = None) -> Path:
+    doc = {
+        "schema": "repro-bench.v1",
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    if meta:
+        doc.update(meta)
+    doc["benchmarks"] = list(_RECORDS)
+    path = Path(path)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return path

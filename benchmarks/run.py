@@ -1,6 +1,13 @@
 """Benchmark harness: one module per paper table/figure + framework benches.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+writes the machine-readable records (per-benchmark wall time, bytes staged,
+evictions) to a JSON artifact (default ``BENCH_pr2.json``; override with
+``--json PATH``) so the perf trajectory is tracked across PRs.
+
+``--quick`` is the CI smoke path: it runs the tiering and map_reduce
+benches, writes the artifact, and exits non-zero if the pipelined
+map_reduce engine is slower than the sequential baseline.
 """
 from __future__ import annotations
 
@@ -12,29 +19,62 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
+DEFAULT_JSON = "BENCH_pr2.json"
+
+
+def _json_path(argv) -> str:
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 < len(argv):
+            return argv[i + 1]
+    return DEFAULT_JSON
+
+
+def _gate(records) -> None:
+    """CI guardrail: the pipelined engine must not lose to sequential."""
+    rows = {r["name"]: r for r in records}
+    pipe = rows.get("bench_mapreduce.pipelined")
+    if pipe is None:
+        print("bench gate: no bench_mapreduce.pipelined record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if pipe.get("speedup", 0.0) < 1.0:
+        print(f"bench gate: pipelined map_reduce slower than sequential "
+              f"({pipe.get('speedup'):.2f}x)", file=sys.stderr)
+        raise SystemExit(1)
+
 
 def main() -> None:
     from benchmarks import (bench_fig6_startup, bench_fig7_storage,
                             bench_fig8_profiles, bench_fig9_kmeans,
-                            bench_kernels, bench_roofline, bench_tiering,
-                            bench_train_step)
+                            bench_kernels, bench_mapreduce, bench_roofline,
+                            bench_tiering, bench_train_step)
+    from benchmarks import common
     quick = "--quick" in sys.argv
+    json_path = _json_path(sys.argv)
     print("name,us_per_call,derived")
     if quick:
-        # CI smoke: the tiering bench exercises pilots, DUs, the managed
-        # hierarchy, and the KMeans path end-to-end in a few seconds
+        # CI smoke: the tiering + map_reduce benches exercise pilots, DUs,
+        # the managed hierarchy, eviction policies, and the pipelined
+        # engine end-to-end in a few seconds
         bench_tiering.run(quick=True)
+        bench_mapreduce.run(quick=True)
+        common.write_json(json_path, meta={"mode": "quick"})
+        print(f"# wrote {json_path}", file=sys.stderr)
+        _gate(common.records())
         return
     failures = 0
     for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
-                bench_train_step, bench_roofline):
+                bench_mapreduce, bench_train_step, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{mod.__name__},0.0,ERROR", file=sys.stderr)
             traceback.print_exc()
+    common.write_json(json_path, meta={"mode": "full"})
+    print(f"# wrote {json_path}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

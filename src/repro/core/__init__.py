@@ -18,7 +18,9 @@ from repro.core.mapreduce import map_reduce
 from repro.core.memory import (PROFILES, TIERS, TierProfile, make_backend)
 from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription, State)
-from repro.core.tiering import CapacityError, TierManager, make_tier_manager
+from repro.core.tiering import (CapacityError, EvictionPolicy, GDSFPolicy,
+                                LRUPolicy, TierManager, make_policy,
+                                make_tier_manager)
 
 __all__ = [
     "DataUnit", "DataUnitDescription", "ComputeDataManager",
@@ -26,5 +28,6 @@ __all__ = [
     "make_backend", "ComputeUnit", "ComputeUnitDescription", "PilotCompute",
     "PilotComputeDescription", "State", "kmeans", "KMeansResult",
     "assign_partial", "make_blobs", "CapacityError", "TierManager",
-    "make_tier_manager",
+    "make_tier_manager", "EvictionPolicy", "LRUPolicy", "GDSFPolicy",
+    "make_policy",
 ]

@@ -72,8 +72,12 @@ def kmeans(du: DataUnit, k: int, iters: int = 5,
            manager: Optional[ComputeDataManager] = None,
            pilot: Optional[PilotCompute] = None,
            map_fn: Callable = assign_partial,
-           seed: int = 0) -> KMeansResult:
-    """Lloyd's algorithm over a (possibly tiered) points DataUnit."""
+           seed: int = 0, prefetch_depth: int = 2,
+           pipeline: bool = True) -> KMeansResult:
+    """Lloyd's algorithm over a (possibly tiered) points DataUnit.
+
+    prefetch_depth/pipeline tune the pipelined map_reduce engine; use
+    pipeline=False for the sequential i+1-prefetch baseline."""
     d = int(np.asarray(du.partition(0)).shape[1])
     rng = np.random.default_rng(seed)
     centroids = rng.normal(size=(k, d)).astype(np.float32)
@@ -83,7 +87,9 @@ def kmeans(du: DataUnit, k: int, iters: int = 5,
         t0 = time.time()
         cent_dev = jnp.asarray(centroids)
         sums, counts, sse = map_reduce(du, map_fn, _reduce, manager=manager,
-                                       pilot=pilot, extra_args=(cent_dev,))
+                                       pilot=pilot, extra_args=(cent_dev,),
+                                       prefetch_depth=prefetch_depth,
+                                       pipeline=pipeline)
         sums, counts, sse = map(np.asarray, (sums, counts, sse))
         nonempty = counts > 0
         centroids = centroids.copy()

@@ -55,7 +55,9 @@ class InProcessBackend(ComputeBackend):
             # ask and demoted to host RAM beyond it
             from repro.core.tiering import make_tier_manager
             pilot.attach_tier_manager(make_tier_manager(
-                device_budget=int(desc.memory_gb * 2 ** 30), mesh=mesh))
+                device_budget=int(desc.memory_gb * 2 ** 30), mesh=mesh,
+                policy=desc.eviction_policy, hysteresis=desc.hysteresis,
+                max_workers=desc.stager_workers))
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

@@ -192,6 +192,27 @@ class DataUnit:
             return None
         return self.tier_manager.prefetch(self._key(i), tier)
 
+    def prefetch_window(self, start: int, depth: int, tier: str = "host",
+                        wrap: bool = False) -> List[Future]:
+        """Issue async prefetches for partitions [start, start+depth) toward
+        `tier` (the depth-k pipeline hint). With wrap=True indices cycle
+        modulo num_partitions (streaming input pipelines). Returns the
+        futures of the stages actually queued."""
+        futs: List[Future] = []
+        n = self.num_partitions
+        if self.tier_manager is None or n == 0:
+            return futs
+        for j in range(depth):
+            i = start + j
+            if wrap:
+                i %= n
+            elif i >= n:
+                break
+            f = self.prefetch(i, tier)
+            if f is not None:
+                futs.append(f)
+        return futs
+
     # ------------------------------------------------------------------
     def to_tier(self, tier: str, delete_source: bool = True) -> "DataUnit":
         """Stage every partition into another tier (paper: stage-in/out)."""

@@ -110,6 +110,26 @@ class ComputeDataManager:
                                    "timed out)")
             time.sleep(0.01)
 
+    def _prefetch_inputs(self, pilot: PilotCompute,
+                         cu_desc: ComputeUnitDescription) -> None:
+        """Paper's ensure-availability semantics: once a CU is bound to a
+        pilot, start staging the partitions it declared it will read first
+        (`prefetch_parts`) toward the pilot's tiers so stage-in overlaps
+        the queue wait (async, refusable under budget pressure — never
+        blocks submission). No hint, no blind prefetch: staging partitions
+        the CU never touches would evict ones it is about to read."""
+        tm = getattr(pilot, "tier_manager", None)
+        if tm is None or not cu_desc.prefetch_parts or not cu_desc.input_data:
+            return
+        # the indices are partition positions of the primary (first) DU;
+        # applying them to sibling DUs would stage partitions the CU never
+        # touches and evict ones it is about to read
+        du = cu_desc.input_data[0]
+        if getattr(du, "tier_manager", None) is tm:
+            tier = "device" if du.tier == "device" else "host"
+            for i in cu_desc.prefetch_parts:
+                du.prefetch(i, tier)
+
     # ------------------------------------------------------------------
     def submit(self, cu_desc: ComputeUnitDescription,
                exclude: frozenset = frozenset()) -> ComputeUnit:
@@ -118,6 +138,7 @@ class ComputeDataManager:
         self.history.append({"cu": cu.id, "pilot": pilot.id,
                              "score": self.score(pilot, cu_desc),
                              "t": time.time()})
+        self._prefetch_inputs(pilot, cu_desc)
         pilot.submit_cu(cu)
         return cu
 

@@ -6,13 +6,26 @@ generates the necessary application tasks (Compute-Units) and runs these in
 parallel considering data locality."
 
 Execution paths (the paper's backend-adaptor mechanism):
-  file/object/host tiers -> one CU per partition through the
-      ComputeDataManager (the paper's file/Redis backends: data staged to
-      the worker per task);
+  file/object/host tiers -> Compute-Units through the ComputeDataManager
+      (the paper's file/Redis backends: data staged to the worker per task);
   device tier           -> partitions already HBM-resident; map runs as a
       jitted kernel per partition WITHOUT restaging, and the executable is
       warm in the pilot's jit cache (the paper's Spark backend: this is
       where the 212x comes from).
+
+Pipelined engine (default): instead of the PR 1 "prefetch partition i+1"
+hint, every path runs a depth-k double-buffered loop — while partition i is
+being mapped, up to `prefetch_depth` later partitions are in flight on the
+TierManager's thread-pool stager, and each mapped value is folded into a
+running partial immediately (fused tree-combining).  The fold keeps exactly
+one partial live per worker, so under a budgeted device tier the reduce
+phase moves one partial per pilot instead of one value per partition, and
+cold-tier stage-in overlaps the map instead of gating it.  On the managed
+path partitions are grouped per pilot: one Compute-Unit per pilot maps+
+combines its contiguous slice, and the driver reduces the per-pilot
+partials.  `pipeline=False` restores the PR 1 sequential behavior (one CU
+per partition, i+1 prefetch, post-hoc reduction) — kept as the benchmark
+baseline.
 """
 from __future__ import annotations
 
@@ -28,36 +41,64 @@ from repro.core.data import DataUnit
 from repro.core.manager import ComputeDataManager
 from repro.core.pilot import ComputeUnitDescription, PilotCompute
 
+# upper bound on waiting for one in-flight prefetch before falling back to
+# reading the partition wherever it currently resides
+_PREFETCH_WAIT_S = 120.0
+
 
 def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
                manager: Optional[ComputeDataManager] = None,
                pilot: Optional[PilotCompute] = None,
                extra_args: tuple = (),
-               jit_map: bool = True) -> Any:
+               jit_map: bool = True,
+               prefetch_depth: int = 2,
+               pipeline: bool = True) -> Any:
     """map_fn(partition, *extra_args) -> value; reduce_fn(a, b) -> value.
 
-    reduce_fn must be associative+commutative (tree reduction order).
+    reduce_fn must be associative+commutative (combine order is not fixed:
+    the pipelined engine folds left per worker and reduces partials across
+    workers; the legacy path tree-reduces).
     """
     if du.tier == "device":
         return _map_reduce_device(du, map_fn, reduce_fn, pilot, extra_args,
-                                  jit_map)
+                                  jit_map, prefetch_depth, pipeline)
     # the compute kernel is identical across tiers (paper: same CU, different
     # backend); only staging differs — so jit the map here too
     mfn = _jit_cached(map_fn) if jit_map else map_fn
+
+    def compute(i):
+        return mfn(jnp.asarray(du.partition(i)), *extra_args)
+
     if manager is None:
-        # local fallback: still partition-parallel in semantics; on managed
-        # cold tiers the background stager pulls partition i+1 toward host
-        # while i computes, so staging overlaps the map instead of gating it
+        if pipeline:
+            return _pipeline_fold(du, range(du.num_partitions), compute,
+                                  reduce_fn, prefetch_depth, "host")
+        # legacy sequential path: i+1 hint, post-hoc reduction
         vals = []
         for i in range(du.num_partitions):
             du.prefetch(i + 1)
-            vals.append(mfn(jnp.asarray(du.partition(i)), *extra_args))
+            vals.append(compute(i))
         return functools.reduce(reduce_fn, vals)
+
+    if pipeline:
+        # fused partial reduction per pilot: one CU per contiguous partition
+        # group maps + combines locally; only the per-pilot partials cross
+        # back to the driver (cuts reduce-phase data motion)
+        cus = []
+        for gi, idxs in enumerate(_partition_groups(du, manager)):
+            cus.append(manager.submit(ComputeUnitDescription(
+                fn=lambda idxs=idxs: _pipeline_fold(
+                    du, idxs, compute, reduce_fn, prefetch_depth, "host"),
+                input_data=(du,), affinity=du.affinity,
+                prefetch_parts=tuple(idxs[:prefetch_depth]),
+                name=f"{du.name}-mapg{gi:03d}")))
+        return functools.reduce(reduce_fn, [cu.result() for cu in cus])
+
     cus = []
 
     def _task(idx):
         du.prefetch(idx + 1)
-        return mfn(jnp.asarray(du.partition(idx)), *extra_args)
+        return compute(idx)
 
     for i in range(du.num_partitions):
         cus.append(manager.submit(ComputeUnitDescription(
@@ -66,6 +107,45 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
             name=f"{du.name}-map{i:04d}")))
     vals = [cu.result() for cu in cus]
     return functools.reduce(reduce_fn, vals)
+
+
+def _pipeline_fold(du: DataUnit, indices, compute: Callable,
+                   reduce_fn: Callable, depth: int, tier: str) -> Any:
+    """Depth-k double-buffered map+combine over `indices`.
+
+    Keeps up to `depth` stage-ins in flight on the background stager while
+    the current partition computes, waits for partition i's own stage (if
+    one was issued) so the read hits the warm tier, and folds each mapped
+    value into a running partial so at most one partial plus the current
+    partition are live at any time.
+    """
+    indices = list(indices)
+    depth = max(1, int(depth))
+    inflight: dict = {}
+    acc = None
+    for pos, i in enumerate(indices):
+        for j in indices[pos + 1: pos + 1 + depth]:
+            if j not in inflight:
+                inflight[j] = du.prefetch(j, tier)
+        fut = inflight.pop(i, None)
+        if fut is not None:
+            try:
+                fut.result(timeout=_PREFETCH_WAIT_S)
+            except Exception:   # noqa: BLE001
+                pass    # refused/raced stage: the read finds the partition
+        val = compute(i)
+        acc = val if acc is None else reduce_fn(acc, val)
+    return acc
+
+
+def _partition_groups(du: DataUnit,
+                      manager: ComputeDataManager) -> List[List[int]]:
+    """Contiguous partition slices, one per healthy pilot (>=1)."""
+    n_workers = max(1, len(manager.service.healthy_pilots()))
+    n_groups = max(1, min(du.num_partitions, n_workers))
+    bounds = np.linspace(0, du.num_partitions, n_groups + 1).astype(int)
+    return [list(range(bounds[g], bounds[g + 1]))
+            for g in range(n_groups) if bounds[g] < bounds[g + 1]]
 
 
 _JIT_CACHE: dict = {}
@@ -78,15 +158,22 @@ def _jit_cached(fn):
 
 
 def _map_reduce_device(du: DataUnit, map_fn, reduce_fn, pilot, extra_args,
-                       jit_map: bool):
+                       jit_map: bool, prefetch_depth: int, pipeline: bool):
     """Device-tier path: no host restaging; jitted map; warm-cache reuse."""
     if jit_map:
         if pilot is not None:
             jitted = pilot.jit_cached(("map", map_fn), lambda: jax.jit(map_fn))
         else:
-            jitted = jax.jit(map_fn)
+            jitted = _jit_cached(map_fn)
     else:
         jitted = map_fn
+    if pipeline:
+        # fused combine keeps one partial in HBM instead of num_partitions
+        # mapped values awaiting the tree reduce
+        return _pipeline_fold(
+            du, range(du.num_partitions),
+            lambda i: jitted(du.partition_device(i), *extra_args),
+            reduce_fn, prefetch_depth, "device")
     vals: List[Any] = []
     for i in range(du.num_partitions):
         # under a budgeted device tier some partitions sit one level colder;

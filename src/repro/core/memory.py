@@ -58,6 +58,13 @@ PROFILES: Dict[str, TierProfile] = {
     "native": TierProfile("native"),
 }
 
+# Nominal read/write bandwidth (bytes/s) per tier when its profile runs
+# unthrottled; cost-aware eviction (GDSF) uses these so restage costs stay
+# ordered (file < object << host << device) even without simulated profiles.
+DEFAULT_TIER_BANDWIDTH: Dict[str, float] = {
+    "file": 200e6, "object": 80e6, "host": 10e9, "device": 60e9,
+}
+
 
 class StorageBackend:
     """One tier's put/get/delete over named partitions."""

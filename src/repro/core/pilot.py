@@ -40,6 +40,10 @@ class PilotComputeDescription:
     mesh_shape: Tuple[int, ...] = ()
     memory_gb: float = 0.0           # YARN-style memory ask: becomes the
     #                                  pilot TierManager's device-tier budget
+    eviction_policy: str = "lru"     # "lru" | "gdsf" for the pilot's tiers
+    hysteresis: int = 0              # eviction ping-pong damping (clock ticks)
+    stager_workers: int = 2          # TierManager stager pool width (the
+    #                                  depth-k pipeline needs >= depth)
     affinity: str = ""               # locality label
     queue_depth: int = 1024
     # simulated-backend knobs (provisioning latency per paper Fig. 6)
@@ -53,6 +57,9 @@ class ComputeUnitDescription:
     args: Tuple = ()
     kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     input_data: Sequence[Any] = ()          # DataUnits the CU reads
+    prefetch_parts: Optional[Sequence[int]] = None  # partitions of the first
+    #                                         input DU the CU reads first
+    #                                         (ensure-availability hint)
     stage_inputs: bool = False              # promote cold DUs to host first
     output_tier: Optional[str] = None       # stage result into this tier
     affinity: str = ""

@@ -8,14 +8,31 @@ repro.core.memory give the tiers themselves; this module adds the
 management the paper assigns to Pilot-Data:
 
   * per-tier capacity budgets (bytes) — HBM and host RAM are finite;
-  * LRU eviction that *demotes* a partition to the next-colder tier
+  * pluggable eviction that *demotes* a partition to the next-colder tier
     (device -> host -> object/file) instead of dropping it, so data is
-    never lost to pressure;
+    never lost to pressure.  Policies: plain LRU (default, recency only)
+    and GDSF (Greedy-Dual-Size-Frequency: priority = frequency x
+    cost-of-restage / size, so a small hot partition outlives a large cold
+    one even when the cold one was touched more recently);
+  * eviction hysteresis: freshly demoted partitions sit out promotion (and
+    freshly promoted ones are deprioritized as victims) for a configurable
+    number of clock ticks, bounding demote/promote ping-pong under
+    adversarial alternating access patterns;
   * access-heat tracking with automatic promotion of hot partitions
     toward the device tier (the Spark `persist()` analogue);
   * `pin`/`unpin` so a working set can be exempted from eviction;
   * an async staging pipeline (thread-pool stager returning futures) so
     stage-in/promotion overlaps with Compute-Unit execution.
+
+Hot-path accounting is amortized: reads never take the manager-wide
+metadata lock.  Residency lookup is a plain (GIL-atomic) dict read whose
+staleness is tolerated by the copy-first/delete-last move protocol, and
+heat/recency updates land in a sharded access ledger (one small lock per
+shard, touched by at most a handful of readers each) that is folded into
+the authoritative entries in batches — on shard overflow, when a key has
+accumulated enough heat to matter for promotion, and always right before
+an eviction decision, so LRU/GDSF victim selection still sees exact
+recency and frequency.
 
 A partition (key) is resident in exactly one managed tier at a time.
 Moves copy to the destination *before* deleting the source and flip the
@@ -25,14 +42,15 @@ either-tier-consistent data and never a hole.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Dict, Iterable, List, Optional, Sequence
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.memory import StorageBackend, TIERS
+from repro.core.memory import DEFAULT_TIER_BANDWIDTH, StorageBackend, TIERS
 
 
 class CapacityError(RuntimeError):
@@ -45,8 +63,151 @@ class _Entry:
     tier: str
     nbytes: int
     pinned: bool = False
-    heat: int = 0
+    heat: int = 0               # accesses since the last promotion decision
+    freq: int = 0               # lifetime accesses (GDSF frequency term)
     last_access: int = 0
+    no_promote_until: int = 0   # hysteresis stamp set on demotion
+    no_demote_until: int = 0    # hysteresis stamp set on promotion
+
+
+# -- eviction policies ---------------------------------------------------
+class EvictionPolicy:
+    """Chooses the victim among evictable entries of an over-budget tier.
+
+    `candidates` is never empty, already filtered to unpinned, not-in-
+    flight, not-excluded entries of `tier`.  Called with the manager's
+    metadata lock held, so implementations must not call back into
+    locking TierManager methods other than `_restage_cost_entry`.
+    """
+
+    name = "policy"
+
+    def select_victim(self, tier: str, candidates: Sequence[_Entry],
+                      manager: "TierManager") -> _Entry:
+        raise NotImplementedError
+
+    def on_evict(self, tier: str, entry: _Entry,
+                 manager: "TierManager") -> None:
+        """Hook invoked just before `entry` is demoted out of `tier`."""
+
+
+class LRUPolicy(EvictionPolicy):
+    """Pure recency (the PR 1 behavior; default)."""
+
+    name = "lru"
+
+    def select_victim(self, tier, candidates, manager):
+        return min(candidates, key=lambda e: e.last_access)
+
+
+class GDSFPolicy(EvictionPolicy):
+    """Greedy-Dual-Size-Frequency with cost-of-restage weighting.
+
+    priority(e) = L(tier at access time) + (1 + freq(e)) * restage_cost(e)
+                  / size(e)
+
+    restage_cost is the estimated seconds to bring the partition back
+    (read from the next-colder tier + write back into this one), derived
+    from the TierProfile bandwidths/latencies, so evicting data that is
+    expensive to re-stage requires proportionally more pressure.  L is the
+    classic GDSF aging term: each eviction inflates it to the evicted
+    priority, and an entry's priority is *frozen with the L current at its
+    last access* (recomputed only when its freq/tier changes), so a once-
+    hot long-idle entry keeps its stale small-L priority while freshly
+    accessed entries earn the inflated one — long-idle data eventually
+    becomes evictable instead of squatting on its lifetime frequency.
+    """
+
+    name = "gdsf"
+
+    def __init__(self):
+        self._L: Dict[str, float] = {}
+        # key -> (freq, tier, H): H computed with L at that access state
+        self._h: Dict[str, tuple] = {}
+
+    def priority(self, entry: _Entry, manager: "TierManager") -> float:
+        cached = self._h.get(entry.key)
+        if (cached is not None and cached[0] == entry.freq
+                and cached[1] == entry.tier):
+            return cached[2]
+        cost = manager._restage_cost_entry(entry)
+        h = (self._L.get(entry.tier, 0.0)
+             + (1.0 + entry.freq) * cost / max(entry.nbytes, 1))
+        self._h[entry.key] = (entry.freq, entry.tier, h)
+        return h
+
+    def select_victim(self, tier, candidates, manager):
+        return min(candidates,
+                   key=lambda e: (self.priority(e, manager), e.last_access))
+
+    def on_evict(self, tier, entry, manager):
+        self._L[tier] = self.priority(entry, manager)
+        self._h.pop(entry.key, None)
+        if len(self._h) > 2 * len(manager._entries):
+            self._h = {k: v for k, v in self._h.items()
+                       if k in manager._entries}
+
+
+def make_policy(policy: Union[str, EvictionPolicy]) -> EvictionPolicy:
+    if isinstance(policy, EvictionPolicy):
+        return policy
+    if policy == "lru":
+        return LRUPolicy()
+    if policy == "gdsf":
+        return GDSFPolicy()
+    raise ValueError(f"unknown eviction policy {policy!r} "
+                     "(expected 'lru', 'gdsf', or an EvictionPolicy)")
+
+
+# -- amortized access accounting ----------------------------------------
+class _AccessLedger:
+    """Sharded pending-access counters; the lock-contention absorber.
+
+    Readers record (count, last-clock) per key under a shard-local lock and
+    the shards are drained into the authoritative entries in batches.  The
+    global metadata lock is never taken on the record path; drain() is only
+    called by holders of the metadata lock (lock order: meta -> shard)."""
+
+    def __init__(self, nshards: int = 8, flush_every: int = 64,
+                 key_trigger: int = 0):
+        self.nshards = max(1, nshards)
+        self.flush_every = max(1, flush_every)
+        self.key_trigger = key_trigger      # promote_threshold fast path
+        self._shards: List[Dict[str, List[int]]] = [
+            {} for _ in range(self.nshards)]
+        self._locks = [threading.Lock() for _ in range(self.nshards)]
+        self._pending = [0] * self.nshards
+
+    def record(self, key: str, clock: int) -> Tuple[bool, int]:
+        """Note one access; returns (flush-now?, key's pending count)."""
+        i = hash(key) % self.nshards
+        with self._locks[i]:
+            ent = self._shards[i].get(key)
+            if ent is None:
+                ent = self._shards[i][key] = [0, 0]
+            ent[0] += 1
+            if clock > ent[1]:
+                ent[1] = clock
+            self._pending[i] += 1
+            flush = (self._pending[i] >= self.flush_every
+                     or (self.key_trigger > 0 and ent[0] >= self.key_trigger))
+            return flush, ent[0]
+
+    def drain(self) -> Dict[str, Tuple[int, int]]:
+        out: Dict[str, Tuple[int, int]] = {}
+        for i in range(self.nshards):
+            with self._locks[i]:
+                if not self._shards[i]:
+                    continue
+                for k, (cnt, last) in self._shards[i].items():
+                    prev = out.get(k)
+                    if prev is None:
+                        out[k] = (cnt, last)
+                    else:
+                        out[k] = (prev[0] + cnt, max(prev[1], last))
+                self._shards[i].clear()
+                self._pending[i] = 0
+        return out
 
 
 class TierManager:
@@ -56,11 +217,18 @@ class TierManager:
     budgets  — tier name -> capacity in bytes; missing/None = unbounded.
     promote_threshold — accesses after which a partition is asynchronously
         promoted one tier hotter (0 disables auto-promotion).
+    policy — eviction policy: "lru" (default), "gdsf", or an
+        EvictionPolicy instance.
+    hysteresis — clock ticks a demoted partition sits out re-promotion
+        (and a promoted one is deprioritized as a victim); 0 disables.
     """
 
     def __init__(self, backends: Dict[str, StorageBackend],
                  budgets: Optional[Dict[str, Optional[int]]] = None,
-                 *, promote_threshold: int = 4, max_workers: int = 2):
+                 *, promote_threshold: int = 4, max_workers: int = 2,
+                 policy: Union[str, EvictionPolicy] = "lru",
+                 hysteresis: int = 0, ledger_shards: int = 8,
+                 ledger_flush_every: int = 64):
         unknown = set(backends) - set(TIERS)
         if unknown:
             raise ValueError(f"unknown tiers {sorted(unknown)}")
@@ -70,16 +238,34 @@ class TierManager:
         self.budgets: Dict[str, Optional[int]] = {
             t: (budgets or {}).get(t) for t in self.order}
         self.promote_threshold = promote_threshold
+        self.policy = make_policy(policy)
+        self.hysteresis = int(hysteresis)
         self._entries: Dict[str, _Entry] = {}
         self._usage: Dict[str, int] = {t: 0 for t in self.order}
         self._peak: Dict[str, int] = {t: 0 for t in self.order}
-        self._clock = 0
+        self._tick = itertools.count(1)   # GIL-atomic monotonic clock
+        self._latest_tick = 0
+        self._ledger = _AccessLedger(ledger_shards, ledger_flush_every,
+                                     key_trigger=promote_threshold)
         self._meta = threading.RLock()
         self._moving: set = set()      # keys with a copy in flight
         self._inflight: Dict[tuple, Future] = {}
+        self._closed = False
         self._executor = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="tier-stager")
         self.events: List[dict] = []   # telemetry: evict/demote/promote/stage
+        self.counters: Dict[str, int] = {
+            "demotions": 0, "promotions": 0, "bytes_demoted": 0,
+            "bytes_promoted": 0, "stage_refused": 0}
+
+    # -- clock ----------------------------------------------------------
+    def _tick_next(self) -> int:
+        t = next(self._tick)
+        self._latest_tick = t   # benign race: only needs to be monotone-ish
+        return t
+
+    def _now(self) -> int:
+        return self._latest_tick
 
     # -- introspection --------------------------------------------------
     def budget(self, tier: str) -> Optional[int]:
@@ -94,9 +280,8 @@ class TierManager:
             return self._peak.get(tier, 0)
 
     def tier_of(self, key: str) -> Optional[str]:
-        with self._meta:
-            e = self._entries.get(key)
-            return e.tier if e else None
+        e = self._entries.get(key)
+        return e.tier if e else None
 
     def entry_nbytes(self, key: str) -> int:
         with self._meta:
@@ -108,6 +293,7 @@ class TierManager:
 
     def stats(self) -> Dict[str, dict]:
         with self._meta:
+            self._apply_ledger_locked(allow_promote=False)
             out = {}
             for t in self.order:
                 ent = [e for e in self._entries.values() if e.tier == t]
@@ -115,6 +301,25 @@ class TierManager:
                           "budget": self.budgets[t], "entries": len(ent),
                           "pinned": sum(e.pinned for e in ent)}
             return out
+
+    def event_summary(self) -> Dict[str, int]:
+        """Cumulative movement counters (for benchmarks/CI artifacts)."""
+        with self._meta:
+            return dict(self.counters)
+
+    def restage_cost(self, key: str) -> float:
+        """Estimated seconds to re-stage `key` from the next-colder tier."""
+        with self._meta:
+            return self._restage_cost_entry(self._entries[key])
+
+    def _restage_cost_entry(self, e: _Entry) -> float:
+        colder = self._colder(e.tier) or e.tier
+        rp = self.backends[colder].profile
+        read_bw = rp.read_bw or DEFAULT_TIER_BANDWIDTH.get(colder, 1e9)
+        wp = self.backends[e.tier].profile
+        write_bw = wp.write_bw or DEFAULT_TIER_BANDWIDTH.get(e.tier, 1e9)
+        return (rp.latency + e.nbytes / read_bw
+                + wp.latency + e.nbytes / write_bw)
 
     # -- internal helpers (meta lock held) ------------------------------
     def _hotter(self, tier: str) -> Optional[str]:
@@ -126,23 +331,62 @@ class TierManager:
         return self.order[i - 1] if i > 0 else None
 
     def _touch(self, e: _Entry) -> None:
-        self._clock += 1
-        e.last_access = self._clock
+        e.last_access = self._tick_next()
         e.heat += 1
+        e.freq += 1
 
     def _charge(self, tier: str, nbytes: int) -> None:
         self._usage[tier] += nbytes
         if self._usage[tier] > self._peak[tier]:
             self._peak[tier] = self._usage[tier]
 
+    def _apply_ledger_locked(self, allow_promote: bool = True) -> List[tuple]:
+        """Fold pending ledger records into the entries; return promotion
+        targets (key, tier) to schedule once the lock is released."""
+        recs = self._ledger.drain()
+        promote: List[tuple] = []
+        if not recs:
+            return promote
+        now = self._now()
+        for key, (cnt, last) in recs.items():
+            e = self._entries.get(key)
+            if e is None:
+                continue
+            e.heat += cnt
+            e.freq += cnt
+            if last > e.last_access:
+                e.last_access = last
+            if (allow_promote and self.promote_threshold
+                    and e.heat >= self.promote_threshold):
+                # the decision consumes the heat either way: blocked keys
+                # (hysteresis, hottest tier, oversized) re-earn it instead
+                # of re-triggering a flush on every subsequent read
+                e.heat = 0
+                if now < e.no_promote_until:
+                    continue
+                hot = self._hotter(e.tier)
+                budget = self.budgets.get(hot) if hot else None
+                if hot is not None and (budget is None
+                                        or e.nbytes <= budget):
+                    promote.append((key, hot))
+        return promote
+
+    def _flush_accounting(self) -> None:
+        with self._meta:
+            promote = self._apply_ledger_locked()
+        for key, tier in promote:
+            self.stage_async(key, tier)
+
     def _make_room(self, tier: str, need: int, exclude: frozenset) -> None:
-        """Demote LRU entries until `need` fits in `tier`'s budget."""
+        """Demote policy-chosen entries until `need` fits in `tier`."""
         budget = self.budgets.get(tier)
         if budget is None or need <= 0:
             return
         if need > budget:
             raise CapacityError(
                 f"{need} bytes exceed the whole {tier!r} budget ({budget})")
+        # eviction decisions must see exact recency/frequency
+        self._apply_ledger_locked(allow_promote=False)
         while self._usage[tier] + need > budget:
             victims = [e for e in self._entries.values()
                        if e.tier == tier and not e.pinned
@@ -153,7 +397,14 @@ class TierManager:
                     f"tier {tier!r} over budget and nothing evictable "
                     f"(usage={self._usage[tier]}, need={need}, "
                     f"budget={budget})")
-            victim = min(victims, key=lambda e: e.last_access)
+            if self.hysteresis:
+                # prefer victims past their promotion hold-down; capacity
+                # is a hard constraint, so fall back to the full set
+                now = self._now()
+                settled = [e for e in victims if e.no_demote_until <= now]
+                victims = settled or victims
+            victim = self.policy.select_victim(tier, victims, self)
+            self.policy.on_evict(tier, victim, self)
             self._demote_locked(victim, exclude)
 
     def _demote_locked(self, e: _Entry, exclude: frozenset) -> None:
@@ -169,14 +420,18 @@ class TierManager:
         self.backends[dst].put(e.key, val)
         e.tier = dst
         e.heat = 0          # demoted data must re-earn promotion
+        if self.hysteresis:
+            e.no_promote_until = self._now() + self.hysteresis
         self._usage[src] -= e.nbytes
         self.backends[src].delete(e.key)
+        self.counters["demotions"] += 1
+        self.counters["bytes_demoted"] += e.nbytes
         self.events.append({"op": "demote", "key": e.key, "from": src,
                             "to": dst, "bytes": e.nbytes})
 
     # -- placement ------------------------------------------------------
     def put(self, key: str, value, tier: str, pinned: bool = False) -> None:
-        """Store `value` in `tier`, evicting (demoting) LRU data to fit.
+        """Store `value` in `tier`, evicting (demoting) data to fit.
 
         On CapacityError nothing has changed: a pre-existing copy of the
         key (any tier) is still resident and correctly accounted.
@@ -212,9 +467,8 @@ class TierManager:
         if old is not None and old.tier != tier:
             self._usage[old.tier] -= old.nbytes
             self.backends[old.tier].delete(key)
-        self._clock += 1
         self._entries[key] = _Entry(key, tier, nbytes, pinned=pinned,
-                                    last_access=self._clock)
+                                    last_access=self._tick_next())
 
     def delete(self, key: str) -> None:
         with self._meta:
@@ -235,22 +489,22 @@ class TierManager:
                 return
             self._make_room(tier, nbytes, frozenset({key}))
             self._charge(tier, nbytes)
-            self._clock += 1
             self._entries[key] = _Entry(key, tier, int(nbytes), pinned=pinned,
-                                        last_access=self._clock)
+                                        last_access=self._tick_next())
 
     # -- access ---------------------------------------------------------
     def get(self, key: str) -> np.ndarray:
         """Read a partition from wherever it currently resides.
 
-        Tolerates concurrent staging: a move copies to the destination,
-        flips residency, then deletes the source, so on a miss we re-read
-        the (updated) residency and retry.
+        Lock-free on the hot path: residency is a GIL-atomic dict read and
+        access accounting goes through the sharded ledger.  Tolerates
+        concurrent staging: a move copies to the destination, flips
+        residency, then deletes the source, so on a miss we re-read the
+        (updated) residency and retry.
         """
         for _ in range(8):
-            with self._meta:
-                e = self._entries.get(key)
-                tier = e.tier if e else None
+            e = self._entries.get(key)      # snapshot; staleness tolerated
+            tier = e.tier if e else None
             if tier is None:
                 break
             try:
@@ -274,9 +528,8 @@ class TierManager:
     def get_device(self, key: str):
         """Device-resident handle if HBM holds the key; else staged read."""
         import jax
-        with self._meta:
-            e = self._entries.get(key)
-            tier = e.tier if e else None
+        e = self._entries.get(key)          # lock-free residency snapshot
+        tier = e.tier if e else None
         be = self.backends.get("device")
         if tier == "device" and be is not None and hasattr(be, "get_device"):
             try:
@@ -290,21 +543,18 @@ class TierManager:
         return jax.device_put(np.asarray(self.get(key)))
 
     def _after_read(self, key: str) -> None:
-        promote_to = None
-        with self._meta:
+        flush, pending = self._ledger.record(key, self._tick_next())
+        if not flush and self.promote_threshold:
+            # non-promoting drains (_make_room, stats) may have consumed
+            # part of this key's window while its accumulated heat kept
+            # growing; a lock-free peek over drained heat + pending window
+            # keeps the PR 1 guarantee that the threshold-th read triggers
+            # the promotion decision
             e = self._entries.get(key)
-            if e is None:
-                return
-            self._touch(e)
-            if self.promote_threshold and e.heat >= self.promote_threshold:
-                hot = self._hotter(e.tier)
-                budget = self.budgets.get(hot) if hot else None
-                fits = budget is None or e.nbytes <= budget
-                if hot is not None and fits:
-                    e.heat = 0
-                    promote_to = hot
-        if promote_to is not None:
-            self.stage_async(key, promote_to)
+            flush = (e is not None
+                     and e.heat + pending >= self.promote_threshold)
+        if flush:
+            self._flush_accounting()
 
     # -- pinning --------------------------------------------------------
     def pin(self, keys: Iterable[str] | str) -> None:
@@ -379,17 +629,29 @@ class TierManager:
                 self.backends[src].delete(key)
             self._moving.discard(key)
             hot = self.order.index(tier) > self.order.index(src)
-            self.events.append({"op": "promote" if hot else "demote",
-                                "key": key, "from": src, "to": tier,
-                                "bytes": nbytes})
+            if self.hysteresis:
+                if hot:
+                    e.no_demote_until = self._now() + self.hysteresis
+                else:
+                    e.no_promote_until = self._now() + self.hysteresis
+            op = "promote" if hot else "demote"
+            self.counters["promotions" if hot else "demotions"] += 1
+            self.counters["bytes_promoted" if hot
+                          else "bytes_demoted"] += nbytes
+            self.events.append({"op": op, "key": key, "from": src,
+                                "to": tier, "bytes": nbytes})
         return tier
 
     def stage_async(self, key: str, tier: str,
                     keep_source: bool = False) -> Future:
         """Queue a move on the background stager; returns a future resolving
         to the tier the key ends up in (the current tier if the move was
-        refused for capacity)."""
+        refused for capacity, or immediately after close())."""
         with self._meta:
+            if self._closed:
+                fut: Future = Future()
+                fut.set_result(self.tier_of(key) or tier)
+                return fut
             fut = self._inflight.get((key, tier))
             if fut is not None and not fut.done():
                 return fut
@@ -405,6 +667,7 @@ class TierManager:
             return self.stage(key, tier, keep_source=keep_source)
         except CapacityError:
             with self._meta:
+                self.counters["stage_refused"] += 1
                 self.events.append({"op": "stage-refused", "key": key,
                                     "to": tier})
             return self.tier_of(key) or tier
@@ -426,22 +689,45 @@ class TierManager:
         with self._meta:
             futs = list(self._inflight.values())
         for f in futs:
-            f.result(timeout)
+            if f.cancelled():
+                continue
+            try:
+                f.result(timeout)
+            except CancelledError:
+                continue
+        self._flush_accounting()
 
     def close(self) -> None:
-        self._executor.shutdown(wait=True)
+        """Deterministic shutdown: refuse new stages, cancel queued moves,
+        wait for in-flight ones to land, and join the stager threads, so
+        no tier-stager thread or half-applied move outlives the manager.
+        Idempotent; reads keep working afterwards."""
+        with self._meta:
+            if self._closed:
+                return
+            self._closed = True
+        # queued-but-unstarted moves are cancelled (their capacity is only
+        # reserved once they run, so nothing leaks); running moves complete
+        # their copy-first/delete-last protocol before the join returns
+        self._executor.shutdown(wait=True, cancel_futures=True)
+        with self._meta:
+            self._inflight.clear()
+            self._apply_ledger_locked(allow_promote=False)
 
     def __repr__(self) -> str:
         parts = ", ".join(
             f"{t}={self._usage[t]}/{self.budgets[t] or 'inf'}"
             for t in self.order)
-        return f"TierManager({parts})"
+        return f"TierManager({parts}, policy={self.policy.name})"
 
 
 def make_tier_manager(*, device_budget: Optional[int] = None,
                       host_budget: Optional[int] = None,
                       root: Optional[str] = None, mesh=None,
-                      promote_threshold: int = 4) -> TierManager:
+                      promote_threshold: int = 4,
+                      policy: Union[str, EvictionPolicy] = "lru",
+                      hysteresis: int = 0,
+                      max_workers: int = 2) -> TierManager:
     """Convenience: a host(+file)(+device) hierarchy with common budgets.
 
     Without `root` the coldest tier is host RAM (no disk side effects);
@@ -458,4 +744,6 @@ def make_tier_manager(*, device_budget: Optional[int] = None,
         budgets["device"] = int(device_budget)
     if host_budget is not None:
         budgets["host"] = int(host_budget)
-    return TierManager(backends, budgets, promote_threshold=promote_threshold)
+    return TierManager(backends, budgets, promote_threshold=promote_threshold,
+                       policy=policy, hysteresis=hysteresis,
+                       max_workers=max_workers)

@@ -46,20 +46,30 @@ def synthesize_corpus(vocab_size: int, num_tokens: int, seed: int = 0,
 def corpus_data_unit(name: str, cfg: ModelConfig, num_tokens: int,
                      backends: Dict[str, StorageBackend],
                      num_shards: int = 8, seed: int = 0,
-                     tier: str = "file") -> DataUnit:
+                     tier: str = "file", tier_manager=None) -> DataUnit:
     corpus = synthesize_corpus(cfg.vocab_size, num_tokens, seed)
-    return DataUnit.from_array(name, corpus, num_shards, backends, tier=tier)
+    return DataUnit.from_array(name, corpus, num_shards, backends, tier=tier,
+                               tier_manager=tier_manager)
 
 
 class BatchPipeline:
-    """Iterator of train batches with background stage-in + prefetch."""
+    """Iterator of train batches with background stage-in + prefetch.
+
+    When the DataUnit is attached to a TierManager, shard stage-in rides
+    the manager's thread-pool stager via depth-`stage_depth` prefetch
+    hints, so training input staging shares the same tier budgets, heat
+    accounting, and eviction policy as analytics DataUnits (one budget
+    model across the system); an unmanaged DU degrades to plain reads."""
 
     def __init__(self, du: DataUnit, cfg: ModelConfig, batch: int,
-                 seq_len: int, prefetch: int = 2, seed: int = 0):
+                 seq_len: int, prefetch: int = 2, seed: int = 0,
+                 stage_depth: int = 2, stage_tier: str = "host"):
         self.du = du
         self.cfg = cfg
         self.batch = batch
         self.seq_len = seq_len
+        self.stage_depth = stage_depth
+        self.stage_tier = stage_tier
         self.tokens_per_batch = batch * (seq_len + 1)
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
@@ -72,6 +82,14 @@ class BatchPipeline:
         buf = np.empty((0,), np.int32)
         while not self._stop.is_set():
             while buf.size < self.tokens_per_batch:
+                if self._stop.is_set():
+                    return      # bail between shard reads, not only between
+                #                 batches, so close() joins promptly even on
+                #                 slow (throttled) tiers
+                # keep the next shards in flight on the shared stager while
+                # this one is sliced (budget-refused stages are harmless)
+                self.du.prefetch_window(shard_idx + 1, self.stage_depth,
+                                        self.stage_tier, wrap=True)
                 part = np.asarray(
                     self.du.partition(shard_idx % self.du.num_partitions))
                 shard_idx += 1
@@ -82,11 +100,14 @@ class BatchPipeline:
             batch = {"tokens": arr[:, :-1].astype(np.int32),
                      "labels": arr[:, 1:].astype(np.int32)}
             self._add_modalities(batch)
-            try:
-                self._q.put(batch, timeout=1.0)
-            except queue.Full:
-                if self._stop.is_set():
-                    return
+            # retry until the consumer takes it: a slow train step must
+            # stall the stream, not silently drop this batch's tokens
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=1.0)
+                    break
+                except queue.Full:
+                    continue
 
     def _add_modalities(self, batch):
         cfg = self.cfg
@@ -106,9 +127,14 @@ class BatchPipeline:
         return self._q.get()
 
     def close(self):
+        """Stop the producer deterministically (no thread leaks across
+        tests): signal, unblock any pending put, and join. The join bound
+        covers one in-flight shard read (simulated-profile sleeps are
+        capped at 5 s)."""
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout=10.0)

@@ -1,0 +1,150 @@
+"""Multi-pilot distributed Pilot-Data: scaling the 2x-over-budget iterated
+KMeans across pilots holding the SAME TOTAL device budget.
+
+The single-pilot run owns the whole device budget but only half the
+working set fits, so every iteration restages the overflow through that
+pilot's throttled node-local disk (the adversarial LRU sequential scan
+from bench_mapreduce).  The N-pilot run splits both the budget and — via
+replica-aware map_reduce grouping — the partitions: each pilot's group
+sticks to the replicas it already holds, so each pilot thrashes only its
+own 1/N of the working set against its own disk, concurrently.  Restaged
+bytes stay ~constant; the wall clock divides by the pilots' aggregate
+node-local bandwidth (the paper's scale-out argument, and the two-level
+storage paper's node-local replication win).
+
+Rows: bench_multipilot.pilots<N>,us_per_run,derived; machine-readable
+records (wall seconds, speedup vs 1 pilot, bytes staged/replicated) land
+in BENCH_pr3.json via benchmarks.common.  CI gates on the 2-pilot run
+being >= 1.3x the single-pilot wall clock.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, record
+
+ITERS = 3
+DEPTH = 4          # per-pilot pipeline depth = per-pilot stager width
+K = 8
+
+
+def _cold_profile(part_bytes: int, read_ms: float = 12.0,
+                  write_ms: float = 0.3):
+    """A node-local disk whose reads cost ~read_ms per partition and writes
+    ~write_ms (restage-dominated, like bench_mapreduce's scenario A)."""
+    from repro.core.memory import TierProfile
+    return TierProfile("bench_cold_disk", simulate=True, latency=1e-3,
+                       read_bw=part_bytes / (read_ms * 1e-3),
+                       write_bw=part_bytes / (write_ms * 1e-3))
+
+
+def _pilot_tm(root: Path, part_bytes: int, device_budget: int,
+              host_budget: int):
+    from repro.core import TierManager, make_backend
+    from repro.core.memory import FileBackend
+    return TierManager(
+        {"file": FileBackend(root, _cold_profile(part_bytes)),
+         "host": make_backend("host"),
+         "device": make_backend("device")},
+        {"device": device_budget, "host": host_budget},
+        promote_threshold=0, max_workers=DEPTH)
+
+
+def _run_kmeans(n_pilots: int, pts: np.ndarray, parts: int, workdir: Path):
+    """One measured run: N pilots sharing one total device budget."""
+    from repro.core import (ComputeDataManager, DataUnit,
+                            PilotComputeDescription, PilotComputeService,
+                            PilotDataService, kmeans, make_backend)
+
+    part_bytes = pts.nbytes // parts
+    total_device = (parts // 2) * part_bytes + part_bytes // 2  # half the set
+    total_host = 3 * part_bytes                                 # forces disk
+    svc = PilotComputeService()
+    pds = PilotDataService()
+    manager = ComputeDataManager(svc)
+    pilots = []
+    try:
+        for p in range(n_pilots):
+            pilot = svc.submit_pilot(PilotComputeDescription(
+                backend="inprocess", stager_workers=DEPTH))
+            pilot.attach_tier_manager(_pilot_tm(
+                workdir / f"p{p}", part_bytes,
+                total_device // n_pilots,
+                max(total_host // n_pilots, part_bytes + part_bytes // 2)))
+            pds.register_pilot(pilot)
+            pilots.append(pilot)
+        # home placement: unthrottled shared storage the pilots pull from
+        du = pds.register(DataUnit.from_array(
+            "mp-bench", pts, parts, {"host": make_backend("host")},
+            tier="host"))
+        t0 = time.perf_counter()
+        r = kmeans(du, k=K, iters=ITERS, manager=manager,
+                   prefetch_depth=DEPTH)
+        wall = time.perf_counter() - t0
+        for pilot in pilots:
+            pilot.tier_manager.drain(timeout=60)
+        staged = sum(
+            p.tier_manager.counters["bytes_promoted"]
+            + p.tier_manager.counters["bytes_demoted"] for p in pilots)
+        return wall, float(r.sse_history[-1]), {
+            "bytes_staged": staged,
+            "replications": pds.counters["replications"]}
+    finally:
+        pds.close()
+        svc.cancel_all()
+
+
+def run(quick: bool = False) -> float:
+    from repro.core import DataUnit, kmeans, make_backend, make_blobs
+
+    n, parts = (16_000, 16) if quick else (48_000, 16)
+    pts, _ = make_blobs(n, K, d=16, seed=0)
+
+    # warm the jit cache so no run pays compile inside the timer
+    warm = DataUnit.from_array(
+        "warm", pts[: n // parts], 1,
+        {"host": make_backend("host"), "device": make_backend("device")},
+        tier="device")
+    kmeans(warm, k=K, iters=1, seed=0)
+
+    root = Path(tempfile.mkdtemp(prefix="bench_multipilot_"))
+    results = {}
+    try:
+        for n_pilots in (1, 2) if quick else (1, 2, 4):
+            results[n_pilots] = _run_kmeans(
+                n_pilots, pts, parts, root / f"n{n_pilots}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    wall_1, sse_1, stats_1 = results[1]
+    emit("bench_multipilot.pilots1[sim]", wall_1, f"sse={sse_1:.3e}")
+    record("bench_multipilot.pilots1", seconds=wall_1, pilots=1, **stats_1)
+    speedup_2 = 0.0
+    for n_pilots in sorted(results):
+        if n_pilots == 1:
+            continue
+        wall, sse, stats = results[n_pilots]
+        np.testing.assert_allclose(sse, sse_1, rtol=1e-3)
+        speedup = wall_1 / max(wall, 1e-9)
+        if n_pilots == 2:
+            speedup_2 = speedup
+        emit(f"bench_multipilot.pilots{n_pilots}[sim]", wall,
+             f"speedup_vs_1={speedup:.2f}x depth={DEPTH}")
+        record(f"bench_multipilot.pilots{n_pilots}", seconds=wall,
+               pilots=n_pilots, speedup_vs_1=speedup, depth=DEPTH, **stats)
+    if speedup_2 < 1.3:
+        emit("bench_multipilot.WARNING", 0.0,
+             f"2-pilot speedup {speedup_2:.2f}x below the 1.3x target")
+    return speedup_2
+
+
+if __name__ == "__main__":
+    from benchmarks import common
+    print("name,us_per_call,derived")
+    run()
+    common.write_json("BENCH_pr3.json", meta={"mode": "standalone"})

@@ -5,9 +5,11 @@ writes the machine-readable records (per-benchmark wall time, bytes staged,
 evictions) to a JSON artifact (default ``BENCH_pr2.json``; override with
 ``--json PATH``) so the perf trajectory is tracked across PRs.
 
-``--quick`` is the CI smoke path: it runs the tiering and map_reduce
-benches, writes the artifact, and exits non-zero if the pipelined
-map_reduce engine is slower than the sequential baseline.
+``--quick`` is the CI smoke path: it runs the tiering, map_reduce, and
+multi-pilot benches, writes the artifact, and exits non-zero if the
+pipelined map_reduce engine is slower than the sequential baseline or the
+2-pilot distributed Pilot-Data run is below 1.3x the single-pilot wall
+clock on the 2x-over-budget workload.
 """
 from __future__ import annotations
 
@@ -19,7 +21,8 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr2.json"
+DEFAULT_JSON = "BENCH_pr3.json"
+MULTIPILOT_MIN_SPEEDUP = 1.3
 
 
 def _json_path(argv) -> str:
@@ -31,7 +34,8 @@ def _json_path(argv) -> str:
 
 
 def _gate(records) -> None:
-    """CI guardrail: the pipelined engine must not lose to sequential."""
+    """CI guardrails: the pipelined engine must not lose to sequential, and
+    2 pilots must beat 1 pilot >= 1.3x on the over-budget workload."""
     rows = {r["name"]: r for r in records}
     pipe = rows.get("bench_mapreduce.pipelined")
     if pipe is None:
@@ -42,23 +46,35 @@ def _gate(records) -> None:
         print(f"bench gate: pipelined map_reduce slower than sequential "
               f"({pipe.get('speedup'):.2f}x)", file=sys.stderr)
         raise SystemExit(1)
+    mp = rows.get("bench_multipilot.pilots2")
+    if mp is None:
+        print("bench gate: no bench_multipilot.pilots2 record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if mp.get("speedup_vs_1", 0.0) < MULTIPILOT_MIN_SPEEDUP:
+        print(f"bench gate: 2-pilot map_reduce only "
+              f"{mp.get('speedup_vs_1'):.2f}x vs 1 pilot "
+              f"(target {MULTIPILOT_MIN_SPEEDUP}x)", file=sys.stderr)
+        raise SystemExit(1)
 
 
 def main() -> None:
     from benchmarks import (bench_fig6_startup, bench_fig7_storage,
                             bench_fig8_profiles, bench_fig9_kmeans,
-                            bench_kernels, bench_mapreduce, bench_roofline,
-                            bench_tiering, bench_train_step)
+                            bench_kernels, bench_mapreduce, bench_multipilot,
+                            bench_roofline, bench_tiering, bench_train_step)
     from benchmarks import common
     quick = "--quick" in sys.argv
     json_path = _json_path(sys.argv)
     print("name,us_per_call,derived")
     if quick:
-        # CI smoke: the tiering + map_reduce benches exercise pilots, DUs,
-        # the managed hierarchy, eviction policies, and the pipelined
-        # engine end-to-end in a few seconds
+        # CI smoke: the tiering + map_reduce + multipilot benches exercise
+        # pilots, DUs, the managed hierarchy, eviction policies, the
+        # pipelined engine, and the distributed Pilot-Data layer
+        # end-to-end in a few seconds
         bench_tiering.run(quick=True)
         bench_mapreduce.run(quick=True)
+        bench_multipilot.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -66,7 +82,8 @@ def main() -> None:
     failures = 0
     for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
-                bench_mapreduce, bench_train_step, bench_roofline):
+                bench_mapreduce, bench_multipilot, bench_train_step,
+                bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

@@ -18,6 +18,7 @@ from repro.core.mapreduce import map_reduce
 from repro.core.memory import (PROFILES, TIERS, TierProfile, make_backend)
 from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription, State)
+from repro.core.pilotdata import PilotDataService
 from repro.core.tiering import (CapacityError, EvictionPolicy, GDSFPolicy,
                                 LRUPolicy, TierManager, make_policy,
                                 make_tier_manager)
@@ -29,5 +30,5 @@ __all__ = [
     "PilotComputeDescription", "State", "kmeans", "KMeansResult",
     "assign_partial", "make_blobs", "CapacityError", "TierManager",
     "make_tier_manager", "EvictionPolicy", "LRUPolicy", "GDSFPolicy",
-    "make_policy",
+    "make_policy", "PilotDataService",
 ]

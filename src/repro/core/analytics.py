@@ -72,12 +72,13 @@ def kmeans(du: DataUnit, k: int, iters: int = 5,
            manager: Optional[ComputeDataManager] = None,
            pilot: Optional[PilotCompute] = None,
            map_fn: Callable = assign_partial,
-           seed: int = 0, prefetch_depth: int = 2,
+           seed: int = 0, prefetch_depth: Optional[int] = None,
            pipeline: bool = True) -> KMeansResult:
     """Lloyd's algorithm over a (possibly tiered) points DataUnit.
 
-    prefetch_depth/pipeline tune the pipelined map_reduce engine; use
-    pipeline=False for the sequential i+1-prefetch baseline."""
+    prefetch_depth/pipeline tune the pipelined map_reduce engine (None =
+    adaptive depth from measured stage/compute times); use pipeline=False
+    for the sequential i+1-prefetch baseline."""
     d = int(np.asarray(du.partition(0)).shape[1])
     rng = np.random.default_rng(seed)
     centroids = rng.normal(size=(k, d)).astype(np.float32)

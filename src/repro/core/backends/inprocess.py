@@ -49,15 +49,10 @@ class InProcessBackend(ComputeBackend):
         mesh = jax.sharding.Mesh(np.array(devices).reshape(shape), axes,
                                  **mesh_axis_types(len(shape)))
         pilot = PilotCompute(desc, mesh)
-        if desc.memory_gb:
-            # the memory ask becomes a managed device-tier budget: DUs placed
-            # through this pilot's TierManager are retained in HBM up to the
-            # ask and demoted to host RAM beyond it
-            from repro.core.tiering import make_tier_manager
-            pilot.attach_tier_manager(make_tier_manager(
-                device_budget=int(desc.memory_gb * 2 ** 30), mesh=mesh,
-                policy=desc.eviction_policy, hysteresis=desc.hysteresis,
-                max_workers=desc.stager_workers))
+        from repro.core.tiering import tier_manager_for_pilot
+        tm = tier_manager_for_pilot(desc, mesh=mesh)
+        if tm is not None:
+            pilot.attach_tier_manager(tm)
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

@@ -104,6 +104,13 @@ class SimulatedClusterBackend(ComputeBackend):
             mesh = jax.sharding.Mesh(np.array(devices), ("data",),
                                      **mesh_axis_types(1))
         pilot = SimulatedPilot(desc, mesh, self.policy)
+        # same per-pilot managed memory as the inprocess adaptor, so
+        # simulated substrates participate in replica-aware scheduling /
+        # multi-pilot Pilot-Data exactly like real ones
+        from repro.core.tiering import tier_manager_for_pilot
+        tm = tier_manager_for_pilot(desc, mesh=mesh)
+        if tm is not None:
+            pilot.attach_tier_manager(tm)
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

@@ -13,6 +13,16 @@ partition's actual residency is tracked by the manager, which enforces
 capacity budgets, demotes LRU partitions under pressure, promotes hot ones,
 and stages asynchronously. Reads always go through the manager so they find
 a partition wherever it currently lives and record access heat.
+
+Bound to a PilotDataService (repro.core.pilotdata) the DU additionally
+grows *per-pilot replica residency*: a partition can be resident in
+several pilots' managed tiers at once.  Pilot-aware reads
+(`partition(i, pilot=...)`) hit that pilot's own tiers and pull the
+partition through on a miss; `replicate_to_pilot` copies a working set
+into a pilot explicitly; writes (`update_partition`) and `delete`
+invalidate every replica coherently.  The home placement (this DU's own
+`tier_manager`/backends) stays the source of truth the replicas are
+pulled from.
 """
 from __future__ import annotations
 
@@ -50,6 +60,7 @@ class DataUnit:
         self.num_partitions = num_partitions
         self.tier: str = description.preferred_tier
         self.tier_manager = tier_manager
+        self.pilot_data_service = None       # set by PilotDataService.register
         self._lock = threading.Lock()
         self.transfer_log: List[dict] = []   # telemetry for benchmarks
 
@@ -113,7 +124,21 @@ class DataUnit:
         self.tier_manager = tm
         return self
 
-    def partition(self, i: int) -> np.ndarray:
+    def _pilot_route(self, pilot) -> Optional[str]:
+        """Resolve a pilot argument (PilotCompute or id string) to a pilot
+        id this DU's PilotDataService can serve, else None (home read)."""
+        if pilot is None or self.pilot_data_service is None:
+            return None
+        pid = pilot if isinstance(pilot, str) else getattr(pilot, "id", None)
+        if pid is not None and self.pilot_data_service.knows(pid):
+            return pid
+        return None
+
+    def partition(self, i: int, pilot=None) -> np.ndarray:
+        pid = self._pilot_route(pilot)
+        if pid is not None:
+            return np.asarray(
+                self.pilot_data_service.read(self, i, pid))
         key = self._key(i)
         if self.tier_manager is not None:
             return np.asarray(self.tier_manager.get(key))
@@ -134,7 +159,10 @@ class DataUnit:
                         continue
         raise KeyError(key)
 
-    def partition_device(self, i: int) -> jax.Array:
+    def partition_device(self, i: int, pilot=None) -> jax.Array:
+        pid = self._pilot_route(pilot)
+        if pid is not None:
+            return self.pilot_data_service.read(self, i, pid, device=True)
         if self.tier_manager is not None:
             return self.tier_manager.get_device(self._key(i))
         be = self._backend(self.tier)
@@ -185,22 +213,31 @@ class DataUnit:
                                      for i in range(self.num_partitions)])
         return self
 
-    def prefetch(self, i: int, tier: str = "host") -> Optional[Future]:
+    def prefetch(self, i: int, tier: str = "host",
+                 pilot=None) -> Optional[Future]:
         """Async-stage partition i toward a hotter tier (no-op unmanaged,
-        out of range, or already at least that hot)."""
-        if self.tier_manager is None or not 0 <= i < self.num_partitions:
+        out of range, or already at least that hot).  With `pilot` set and
+        the DU bound to a PilotDataService, the stage targets *that pilot's*
+        tiers instead (async replication toward the pilot)."""
+        if not 0 <= i < self.num_partitions:
+            return None
+        pid = self._pilot_route(pilot)
+        if pid is not None:
+            return self.pilot_data_service.replicate_async(self, i, pid, tier)
+        if self.tier_manager is None:
             return None
         return self.tier_manager.prefetch(self._key(i), tier)
 
     def prefetch_window(self, start: int, depth: int, tier: str = "host",
-                        wrap: bool = False) -> List[Future]:
+                        wrap: bool = False, pilot=None) -> List[Future]:
         """Issue async prefetches for partitions [start, start+depth) toward
         `tier` (the depth-k pipeline hint). With wrap=True indices cycle
         modulo num_partitions (streaming input pipelines). Returns the
         futures of the stages actually queued."""
         futs: List[Future] = []
         n = self.num_partitions
-        if self.tier_manager is None or n == 0:
+        if n == 0 or (self.tier_manager is None
+                      and self._pilot_route(pilot) is None):
             return futs
         for j in range(depth):
             i = start + j
@@ -208,10 +245,51 @@ class DataUnit:
                 i %= n
             elif i >= n:
                 break
-            f = self.prefetch(i, tier)
+            f = self.prefetch(i, tier, pilot=pilot)
             if f is not None:
                 futs.append(f)
         return futs
+
+    # -- per-pilot replica surface ---------------------------------------
+    def replicate_to_pilot(self, pilot, parts=None,
+                           tier: str = "device") -> Dict[int, str]:
+        """Copy partitions into a pilot's managed tiers (requires binding
+        via PilotDataService.register); returns {partition: landed tier}."""
+        if self.pilot_data_service is None:
+            raise RuntimeError(f"DataUnit {self.name}: not bound to a "
+                               "PilotDataService")
+        pid = pilot if isinstance(pilot, str) else pilot.id
+        return self.pilot_data_service.replicate_to_pilot(
+            self, pid, parts=parts, tier=tier)
+
+    def replica_residency(self, pilot) -> Dict[str, int]:
+        """Partition count per tier inside one pilot (empty if unbound)."""
+        pid = self._pilot_route(pilot)
+        if pid is None:
+            return {}
+        return self.pilot_data_service.residency(self, pid)
+
+    def replica_fraction(self, pilot, tier: str = "device") -> float:
+        pid = self._pilot_route(pilot)
+        if pid is None:
+            return 0.0
+        return self.pilot_data_service.resident_fraction(self, pid, tier)
+
+    def update_partition(self, i: int, value) -> "DataUnit":
+        """Coherent write: the new value lands in the home placement and
+        every per-pilot replica is invalidated, so a subsequent pilot read
+        re-pulls the fresh bytes instead of serving a stale copy."""
+        if not 0 <= i < self.num_partitions:
+            raise IndexError(f"partition {i} out of range "
+                             f"[0, {self.num_partitions})")
+        arr = np.asarray(value)
+        if self.tier_manager is not None:
+            self.tier_manager.put(self._key(i), arr, self.tier)
+        else:
+            self._backend(self.tier).put(self._key(i), arr)
+        if self.pilot_data_service is not None:
+            self.pilot_data_service.invalidate(self, i)
+        return self
 
     # ------------------------------------------------------------------
     def to_tier(self, tier: str, delete_source: bool = True) -> "DataUnit":
@@ -260,13 +338,20 @@ class DataUnit:
         return self.to_tier(tier, delete_source=False)
 
     def delete(self) -> None:
+        # home copy first, replicas second: a pull-through racing the
+        # delete can only re-replicate while the home copy still exists,
+        # and the trailing invalidation clears any such resurrection — the
+        # opposite order would leak an ownerless replica into a pilot's
+        # budget forever
         if self.tier_manager is not None:
             for i in range(self.num_partitions):
                 self.tier_manager.delete(self._key(i))
-            return
-        be = self._backend(self.tier)
-        for i in range(self.num_partitions):
-            be.delete(self._key(i))
+        else:
+            be = self._backend(self.tier)
+            for i in range(self.num_partitions):
+                be.delete(self._key(i))
+        if self.pilot_data_service is not None:
+            self.pilot_data_service.invalidate(self)
 
     def __repr__(self) -> str:
         return (f"DataUnit({self.name!r}, parts={self.num_partitions}, "

@@ -7,13 +7,25 @@ available Pilots, their utilization and data locality."
 TPU adaptation of locality: the expensive boundaries are host<->HBM staging
 and cross-slice transfers, so the score prefers (1) the pilot whose DEVICE
 tier already holds the CU's DataUnits, then (2) matching affinity labels,
-then (3) host-resident data, then (4) lowest queue depth. Late binding: CUs
-wait in the manager queue until some pilot is provisioned and healthy.
+then (3) host-resident data, then (4) any-tier replica stickiness, then
+(5) lowest queue depth. Late binding: CUs wait in the manager queue until
+some pilot is provisioned and healthy.
+
+Multi-pilot locality: when a DataUnit is bound to a PilotDataService,
+residency is *per pilot* — each pilot is scored by the fraction of the
+DU's partitions ITS OWN TierManager measurably holds (replicas demoted
+inside the pilot stop earning device credit; pilots outside the data
+service earn none), so the CU lands on the pilot actually holding the
+majority of its data.  On binding, the manager queues pre-binding
+stage-in: the partitions the CU declared it reads first are replicated
+toward the CHOSEN pilot's tiers, and the pilot waits for those copies to
+land before the CU body runs (paper's ensure-availability semantics).
 """
 from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.backends.base import get_backend
@@ -21,8 +33,10 @@ from repro.core.data import DataUnit
 from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription, State)
 
-# locality score weights (device residency dominates, as HBM>host>disk)
-W_DEVICE, W_AFFINITY, W_HOST, W_QUEUE = 100.0, 10.0, 5.0, 1.0
+# locality score weights (device residency dominates, as HBM>host>disk;
+# W_LOCAL rewards any-tier replica stickiness so a pilot whose replica was
+# demoted under pressure still beats one that must refetch everything)
+W_DEVICE, W_AFFINITY, W_HOST, W_LOCAL, W_QUEUE = 100.0, 10.0, 5.0, 2.0, 1.0
 
 
 class PilotComputeService:
@@ -63,13 +77,24 @@ class ComputeDataManager:
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _per_pilot_du(pilot: PilotCompute, du: DataUnit):
+        """The DU's PilotDataService when this (pilot, du) pair is scored
+        per-pilot: the DU must be service-bound and the pilot must be a
+        registered replica holder candidate."""
+        pds = getattr(du, "pilot_data_service", None)
+        if (pds is not None and getattr(pilot, "tier_manager", None)
+                is not None and pds.knows(pilot.id)):
+            return pds
+        return None
+
     def _device_tier_hits(self, pilot: PilotCompute,
                           dus: Sequence[DataUnit]) -> float:
-        """Fraction of each DU's partitions actually resident on the pilot's
-        devices. With a TierManager the *measured* residency is used (a DU
-        whose nominal tier is 'device' but whose partitions were demoted
-        under memory pressure earns no device credit); without one we fall
-        back to the DU's single tier field."""
+        """Fraction of each (single-manager) DU's partitions actually
+        resident on the pilot's devices. With a TierManager the *measured*
+        residency is used (a DU whose nominal tier is 'device' but whose
+        partitions were demoted under memory pressure earns no device
+        credit); without one we fall back to the DU's single tier field."""
         hits = 0.0
         for du in dus:
             frac = du.resident_fraction("device")
@@ -88,11 +113,27 @@ class ComputeDataManager:
         return hits
 
     def score(self, pilot: PilotCompute, cu_desc: ComputeUnitDescription) -> float:
-        dus = list(cu_desc.input_data)
-        s = W_DEVICE * self._device_tier_hits(pilot, dus)
+        s = 0.0
+        shared_dus = []     # DUs scored by global (single-manager) residency
+        for du in cu_desc.input_data:
+            pds = self._per_pilot_du(pilot, du)
+            if pds is not None:
+                # per-pilot replica residency: one registry scan yields the
+                # device, host, and any-tier-stickiness terms together
+                n = du.num_partitions
+                if n:
+                    res = pds.residency(du, pilot.id)
+                    s += W_DEVICE * res.get("device", 0) / n
+                    s += W_HOST * res.get("host", 0) / n
+                    s += W_LOCAL * sum(res.values()) / n
+            elif getattr(du, "pilot_data_service", None) is None:
+                shared_dus.append(du)
+            # else: replica-managed DU on a pilot outside the data
+            # service — it holds nothing, so no locality credit
+        s += W_DEVICE * self._device_tier_hits(pilot, shared_dus)
+        s += W_HOST * sum(du.resident_fraction("host") for du in shared_dus)
         if cu_desc.affinity and cu_desc.affinity == pilot.desc.affinity:
             s += W_AFFINITY
-        s += W_HOST * sum(du.resident_fraction("host") for du in dus)
         s -= W_QUEUE * pilot.utilization
         return s
 
@@ -111,34 +152,52 @@ class ComputeDataManager:
             time.sleep(0.01)
 
     def _prefetch_inputs(self, pilot: PilotCompute,
-                         cu_desc: ComputeUnitDescription) -> None:
+                         cu_desc: ComputeUnitDescription) -> List[Future]:
         """Paper's ensure-availability semantics: once a CU is bound to a
         pilot, start staging the partitions it declared it will read first
-        (`prefetch_parts`) toward the pilot's tiers so stage-in overlaps
-        the queue wait (async, refusable under budget pressure — never
-        blocks submission). No hint, no blind prefetch: staging partitions
-        the CU never touches would evict ones it is about to read."""
+        (`prefetch_parts`) toward the CHOSEN pilot's tiers so stage-in
+        overlaps the queue wait (async, refusable under budget pressure —
+        never blocks submission). The returned futures become the CU's
+        pre-binding barrier: the pilot waits for them to land before the
+        CU body runs. No hint, no blind prefetch: staging partitions the
+        CU never touches would evict ones it is about to read."""
         tm = getattr(pilot, "tier_manager", None)
         if tm is None or not cu_desc.prefetch_parts or not cu_desc.input_data:
-            return
+            return []
         # the indices are partition positions of the primary (first) DU;
         # applying them to sibling DUs would stage partitions the CU never
         # touches and evict ones it is about to read
         du = cu_desc.input_data[0]
-        if getattr(du, "tier_manager", None) is tm:
+        futs: List[Future] = []
+        pds = getattr(du, "pilot_data_service", None)
+        if pds is not None and pds.knows(pilot.id):
+            # distributed Pilot-Data: replicate toward the chosen pilot's
+            # own managed tiers (true pre-binding stage-in)
+            for i in cu_desc.prefetch_parts:
+                if 0 <= i < du.num_partitions:
+                    futs.append(pds.replicate_async(du, i, pilot.id))
+        elif getattr(du, "tier_manager", None) is tm:
             tier = "device" if du.tier == "device" else "host"
             for i in cu_desc.prefetch_parts:
-                du.prefetch(i, tier)
+                f = du.prefetch(i, tier)
+                if f is not None:
+                    futs.append(f)
+        return futs
 
     # ------------------------------------------------------------------
     def submit(self, cu_desc: ComputeUnitDescription,
-               exclude: frozenset = frozenset()) -> ComputeUnit:
+               exclude: frozenset = frozenset(),
+               pilot: Optional[PilotCompute] = None) -> ComputeUnit:
+        """Late-bind `cu_desc` onto the best-scoring pilot (or onto an
+        explicitly chosen `pilot`, e.g. a replica-aware map_reduce group)
+        and queue its pre-binding stage-in."""
         cu = ComputeUnit(cu_desc)
-        pilot = self.select_pilot(cu_desc, exclude=exclude)
+        if pilot is None:
+            pilot = self.select_pilot(cu_desc, exclude=exclude)
         self.history.append({"cu": cu.id, "pilot": pilot.id,
                              "score": self.score(pilot, cu_desc),
                              "t": time.time()})
-        self._prefetch_inputs(pilot, cu_desc)
+        cu.prebind_futures = self._prefetch_inputs(pilot, cu_desc)
         pilot.submit_cu(cu)
         return cu
 
@@ -153,13 +212,22 @@ class ComputeDataManager:
                           timeout: Optional[float] = None):
         """Run a CU to completion, transparently resubmitting on CU/pilot
         failure (task-level fault tolerance; pilot-level recovery lives in
-        repro.runtime.fault_tolerance). Each retry re-runs late binding, so a
-        CU whose pilot died lands on a surviving pilot."""
+        repro.runtime.fault_tolerance). Each retry re-runs late binding
+        with every pilot that already failed this CU *excluded*, so a
+        retry cannot late-bind straight back onto the pilot that just
+        failed; when every healthy pilot has failed it, the exclusion
+        resets rather than stranding the CU."""
         last: Optional[Exception] = None
+        exclude: set = set()
         for _ in range(retries + 1):
-            cu = self.submit(cu_desc)
+            healthy = {p.id for p in self.service.healthy_pilots()}
+            if healthy and healthy <= exclude:
+                exclude.clear()
+            cu = self.submit(cu_desc, exclude=frozenset(exclude))
             try:
                 return cu.future.result(timeout)
             except Exception as e:  # noqa: BLE001
                 last = e
+                if cu.pilot_id:
+                    exclude.add(cu.pilot_id)
         raise last

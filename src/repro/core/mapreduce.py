@@ -22,17 +22,34 @@ one partial live per worker, so under a budgeted device tier the reduce
 phase moves one partial per pilot instead of one value per partition, and
 cold-tier stage-in overlaps the map instead of gating it.  On the managed
 path partitions are grouped per pilot: one Compute-Unit per pilot maps+
-combines its contiguous slice, and the driver reduces the per-pilot
-partials.  `pipeline=False` restores the PR 1 sequential behavior (one CU
-per partition, i+1 prefetch, post-hoc reduction) — kept as the benchmark
+combines its slice, and the driver reduces the per-pilot partials.
+`pipeline=False` restores the PR 1 sequential behavior (one CU per
+partition, i+1 prefetch, post-hoc reduction) — kept as the benchmark
 baseline.
+
+Adaptive prefetch depth (default, `prefetch_depth=None`): the depth is
+derived per worker from measured stage-vs-compute times — an EWMA seeded
+from the TierManager's TierProfile restage cost and updated with observed
+prefetch waits and per-partition compute times — so staging-bound scans
+deepen the pipeline while compute-bound scans stop issuing useless
+stages.  Passing `prefetch_depth=k` remains an explicit fixed override.
+
+Replica-aware grouping (DataUnits bound to a PilotDataService): each
+partition group is routed to the pilot already holding (most of) its
+partitions, unheld partitions are balanced across pilots, and the group's
+leading partitions are replicated toward the chosen pilot before the CU
+starts (pre-binding stage-in).  Each pilot's fold then reads through ITS
+OWN TierManager, so a 2-pilot run splits a 2x-over-budget working set
+across two device budgets instead of thrashing one.
 """
 from __future__ import annotations
 
 import functools
+import math
+import time
 
 import jax.numpy as jnp
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -44,6 +61,70 @@ from repro.core.pilot import ComputeUnitDescription, PilotCompute
 # upper bound on waiting for one in-flight prefetch before falling back to
 # reading the partition wherever it currently resides
 _PREFETCH_WAIT_S = 120.0
+# pre-binding stage-in width when the depth itself is adaptive
+_DEFAULT_PREBIND = 2
+
+
+class _AdaptiveDepth:
+    """EWMA-derived pipeline depth: ceil(stage_time / compute_time).
+
+    Staging-bound scans are wall-clock-bounded by staging/depth, so the
+    depth must cover the stage-to-compute ratio; compute-bound scans need
+    only one look-ahead.  The stage estimate is the max of a static seed
+    (the TierProfile-derived restage cost of a representative partition)
+    and an EWMA of *observed* prefetch waits, so an optimistic profile is
+    corrected by measurement; compute is an EWMA of mapped-partition
+    times.  Before the first observation the PR 2 default (2) applies.
+    """
+
+    def __init__(self, seed_stage: float = 0.0, max_depth: int = 8,
+                 alpha: float = 0.4):
+        self.max_depth = max(1, int(max_depth))
+        self.alpha = alpha
+        self._seed = max(0.0, seed_stage)
+        self._wait = 0.0
+        self._compute = 0.0
+        self._n = 0
+
+    def observe(self, compute_s: float, wait_s: float = 0.0) -> None:
+        a = self.alpha
+        if self._n == 0:
+            self._compute, self._wait = compute_s, wait_s
+        else:
+            self._compute = (1 - a) * self._compute + a * compute_s
+            self._wait = (1 - a) * self._wait + a * wait_s
+        self._n += 1
+
+    @property
+    def depth(self) -> int:
+        if self._n == 0 or self._compute <= 1e-9:
+            return min(2, self.max_depth)
+        stage = max(self._seed, self._wait)
+        return max(1, min(self.max_depth,
+                          math.ceil(stage / self._compute)))
+
+
+def _depth_controller(du: DataUnit, prefetch_depth: Optional[int],
+                      indices: Sequence[int],
+                      tier_manager=None) -> Union[int, "_AdaptiveDepth"]:
+    """An explicit depth passes through; None builds the adaptive
+    controller, seeded from the restage cost of the group's first
+    partition in the manager the reads actually go through — the group
+    pilot's own TierManager on the replica path, else the DU's home
+    manager (0 => purely observation-driven)."""
+    if prefetch_depth is not None:
+        return max(1, int(prefetch_depth))
+    seed = 0.0
+    if indices:
+        for tm in (tier_manager, du.tier_manager):
+            if tm is None:
+                continue
+            try:
+                seed = tm.restage_cost(du._key(indices[0]))
+                break
+            except KeyError:
+                continue
+    return _AdaptiveDepth(seed_stage=seed)
 
 
 def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
@@ -51,13 +132,14 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
                pilot: Optional[PilotCompute] = None,
                extra_args: tuple = (),
                jit_map: bool = True,
-               prefetch_depth: int = 2,
+               prefetch_depth: Optional[int] = None,
                pipeline: bool = True) -> Any:
     """map_fn(partition, *extra_args) -> value; reduce_fn(a, b) -> value.
 
     reduce_fn must be associative+commutative (combine order is not fixed:
     the pipelined engine folds left per worker and reduces partials across
-    workers; the legacy path tree-reduces).
+    workers; the legacy path tree-reduces).  prefetch_depth=None sizes the
+    pipeline adaptively from measured stage/compute times; an int fixes it.
     """
     if du.tier == "device":
         return _map_reduce_device(du, map_fn, reduce_fn, pilot, extra_args,
@@ -71,8 +153,10 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
 
     if manager is None:
         if pipeline:
-            return _pipeline_fold(du, range(du.num_partitions), compute,
-                                  reduce_fn, prefetch_depth, "host")
+            idxs = list(range(du.num_partitions))
+            return _pipeline_fold(du, idxs, compute, reduce_fn,
+                                  _depth_controller(du, prefetch_depth, idxs),
+                                  "host")
         # legacy sequential path: i+1 hint, post-hoc reduction
         vals = []
         for i in range(du.num_partitions):
@@ -81,17 +165,38 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
         return functools.reduce(reduce_fn, vals)
 
     if pipeline:
-        # fused partial reduction per pilot: one CU per contiguous partition
-        # group maps + combines locally; only the per-pilot partials cross
-        # back to the driver (cuts reduce-phase data motion)
+        # fused partial reduction per pilot: one CU per partition group
+        # maps + combines locally; only the per-pilot partials cross back
+        # to the driver (cuts reduce-phase data motion)
+        prebind = (prefetch_depth if isinstance(prefetch_depth, int)
+                   else _DEFAULT_PREBIND)
+        replica_groups = _replica_groups(du, manager)
         cus = []
-        for gi, idxs in enumerate(_partition_groups(du, manager)):
-            cus.append(manager.submit(ComputeUnitDescription(
-                fn=lambda idxs=idxs: _pipeline_fold(
-                    du, idxs, compute, reduce_fn, prefetch_depth, "host"),
-                input_data=(du,), affinity=du.affinity,
-                prefetch_parts=tuple(idxs[:prefetch_depth]),
-                name=f"{du.name}-mapg{gi:03d}")))
+        if replica_groups is not None:
+            # distributed Pilot-Data: each group is bound to the pilot
+            # holding its replicas and reads through THAT pilot's tiers
+            for gi, (grp_pilot, idxs) in enumerate(replica_groups):
+                def _fold(idxs=idxs, p=grp_pilot):
+                    comp = (lambda i:
+                            mfn(du.partition_device(i, pilot=p), *extra_args))
+                    return _pipeline_fold(
+                        du, idxs, comp, reduce_fn,
+                        _depth_controller(du, prefetch_depth, idxs,
+                                          tier_manager=p.tier_manager),
+                        "device", pilot=p)
+                cus.append(manager.submit(ComputeUnitDescription(
+                    fn=_fold, input_data=(du,), affinity=du.affinity,
+                    prefetch_parts=tuple(idxs[:prebind]),
+                    name=f"{du.name}-mapg{gi:03d}"), pilot=grp_pilot))
+        else:
+            for gi, idxs in enumerate(_partition_groups(du, manager)):
+                cus.append(manager.submit(ComputeUnitDescription(
+                    fn=lambda idxs=idxs: _pipeline_fold(
+                        du, idxs, compute, reduce_fn,
+                        _depth_controller(du, prefetch_depth, idxs), "host"),
+                    input_data=(du,), affinity=du.affinity,
+                    prefetch_parts=tuple(idxs[:prebind]),
+                    name=f"{du.name}-mapg{gi:03d}")))
         return functools.reduce(reduce_fn, [cu.result() for cu in cus])
 
     cus = []
@@ -110,30 +215,42 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
 
 
 def _pipeline_fold(du: DataUnit, indices, compute: Callable,
-                   reduce_fn: Callable, depth: int, tier: str) -> Any:
+                   reduce_fn: Callable,
+                   depth: Union[int, _AdaptiveDepth], tier: str,
+                   pilot: Optional[PilotCompute] = None) -> Any:
     """Depth-k double-buffered map+combine over `indices`.
 
     Keeps up to `depth` stage-ins in flight on the background stager while
     the current partition computes, waits for partition i's own stage (if
     one was issued) so the read hits the warm tier, and folds each mapped
     value into a running partial so at most one partial plus the current
-    partition are live at any time.
+    partition are live at any time.  With `pilot` set, prefetches and
+    reads target that pilot's own tiers (per-pilot replica residency).
+    An _AdaptiveDepth instance re-sizes the look-ahead every iteration
+    from the measured stage-vs-compute ratio.
     """
     indices = list(indices)
-    depth = max(1, int(depth))
+    adaptive = isinstance(depth, _AdaptiveDepth)
     inflight: dict = {}
     acc = None
     for pos, i in enumerate(indices):
-        for j in indices[pos + 1: pos + 1 + depth]:
+        d = depth.depth if adaptive else max(1, int(depth))
+        for j in indices[pos + 1: pos + 1 + d]:
             if j not in inflight:
-                inflight[j] = du.prefetch(j, tier)
+                inflight[j] = du.prefetch(j, tier, pilot=pilot)
         fut = inflight.pop(i, None)
+        wait_s = 0.0
         if fut is not None:
+            t0 = time.perf_counter()
             try:
                 fut.result(timeout=_PREFETCH_WAIT_S)
             except Exception:   # noqa: BLE001
                 pass    # refused/raced stage: the read finds the partition
+            wait_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
         val = compute(i)
+        if adaptive:
+            depth.observe(compute_s=time.perf_counter() - t0, wait_s=wait_s)
         acc = val if acc is None else reduce_fn(acc, val)
     return acc
 
@@ -148,6 +265,40 @@ def _partition_groups(du: DataUnit,
             for g in range(n_groups) if bounds[g] < bounds[g + 1]]
 
 
+def _replica_groups(du: DataUnit, manager: ComputeDataManager
+                    ) -> Optional[List[Tuple[PilotCompute, List[int]]]]:
+    """Replica-aware partition->pilot assignment, or None when the DU is
+    not bound to a PilotDataService (or no healthy pilot participates in
+    it — the contiguous fallback then applies).
+
+    Each partition sticks to the pilot already holding its replica at the
+    hottest tier (so iterated scans keep hitting warm per-pilot memory);
+    partitions no pilot holds go to the least-loaded pilots, keeping the
+    split balanced and deterministic.
+    """
+    pds = getattr(du, "pilot_data_service", None)
+    if pds is None:
+        return None
+    pilots = [p for p in manager.service.healthy_pilots()
+              if getattr(p, "tier_manager", None) is not None
+              and pds.knows(p.id)]
+    if not pilots:
+        return None
+    by_id = {p.id: p for p in pilots}
+    assign: dict = {p.id: [] for p in pilots}
+    unheld: List[int] = []
+    for i in range(du.num_partitions):
+        best = pds.best_pilot(du._key(i), list(assign))
+        if best is not None:
+            assign[best].append(i)
+        else:
+            unheld.append(i)
+    for i in unheld:
+        target = min(assign, key=lambda pid: len(assign[pid]))
+        assign[target].append(i)
+    return [(by_id[pid], idxs) for pid, idxs in assign.items() if idxs]
+
+
 _JIT_CACHE: dict = {}
 
 
@@ -158,7 +309,8 @@ def _jit_cached(fn):
 
 
 def _map_reduce_device(du: DataUnit, map_fn, reduce_fn, pilot, extra_args,
-                       jit_map: bool, prefetch_depth: int, pipeline: bool):
+                       jit_map: bool, prefetch_depth: Optional[int],
+                       pipeline: bool):
     """Device-tier path: no host restaging; jitted map; warm-cache reuse."""
     if jit_map:
         if pilot is not None:
@@ -170,10 +322,11 @@ def _map_reduce_device(du: DataUnit, map_fn, reduce_fn, pilot, extra_args,
     if pipeline:
         # fused combine keeps one partial in HBM instead of num_partitions
         # mapped values awaiting the tree reduce
+        idxs = list(range(du.num_partitions))
         return _pipeline_fold(
-            du, range(du.num_partitions),
+            du, idxs,
             lambda i: jitted(du.partition_device(i), *extra_args),
-            reduce_fn, prefetch_depth, "device")
+            reduce_fn, _depth_controller(du, prefetch_depth, idxs), "device")
     vals: List[Any] = []
     for i in range(du.num_partitions):
         # under a budgeted device tier some partitions sit one level colder;

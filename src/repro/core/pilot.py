@@ -22,6 +22,11 @@ import jax
 import numpy as np
 
 
+# upper bound on waiting for one pre-binding stage-in before running the CU
+# against wherever the data currently lives
+_PREBIND_WAIT_S = 120.0
+
+
 class State(str, enum.Enum):
     NEW = "New"
     PENDING = "Pending"
@@ -40,6 +45,8 @@ class PilotComputeDescription:
     mesh_shape: Tuple[int, ...] = ()
     memory_gb: float = 0.0           # YARN-style memory ask: becomes the
     #                                  pilot TierManager's device-tier budget
+    host_memory_gb: float = 0.0      # optional host-tier budget for the
+    #                                  pilot's TierManager (0 = unbounded)
     eviction_policy: str = "lru"     # "lru" | "gdsf" for the pilot's tiers
     hysteresis: int = 0              # eviction ping-pong damping (clock ticks)
     stager_workers: int = 2          # TierManager stager pool width (the
@@ -76,6 +83,10 @@ class ComputeUnit:
         self.start_time: float = 0.0
         self.end_time: float = 0.0
         self.pilot_id: Optional[str] = None
+        # pre-binding stage-in futures (paper: ensure data availability
+        # before the CU starts): the manager queues them at bind time; the
+        # pilot waits for them to land before running the CU body
+        self.prebind_futures: List[Future] = []
 
     def result(self, timeout: Optional[float] = None):
         return self.future.result(timeout)
@@ -131,6 +142,15 @@ class PilotCompute:
         with self._lock:
             self._running += 1
         try:
+            # pre-binding stage-in: the copies toward this pilot's tiers
+            # were queued at bind time and overlapped the queue wait; they
+            # must LAND before the CU body runs (refused/raced stages
+            # resolve without raising — reads then pull through instead)
+            for f in cu.prebind_futures:
+                try:
+                    f.result(timeout=_PREBIND_WAIT_S)
+                except Exception:   # noqa: BLE001
+                    pass
             # optional stage-in (cache promotion): off by default so cold
             # tiers keep their re-read cost semantics (paper's file backend)
             if cu.desc.stage_inputs:

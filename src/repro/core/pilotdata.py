@@ -1,0 +1,349 @@
+"""PilotDataService: the distributed Pilot-Data layer over per-pilot tiers.
+
+Paper §3.3 / Fig. 5: Pilot-Data manages Data-Units *across* Pilots on
+heterogeneous infrastructure, and the Compute-Data-Manager binds CUs
+"taking into account the current available Pilots, their utilization and
+data locality".  A single TierManager models one pilot's managed memory;
+this service is the layer above it, the piece that makes "locality" a
+per-pilot fact rather than one shared pool:
+
+  * a **replica registry**: which pilot holds which partition key (each
+    pilot's TierManager remains the authority for *which tier* the replica
+    currently sits in — demotions inside a pilot never desynchronize the
+    registry);
+  * **replication**: `replicate` copies a partition into a target pilot's
+    managed tiers (pull-through on read misses, explicit via
+    `DataUnit.replicate_to_pilot`, async for pre-binding stage-in), with
+    per-key stripe locks serializing replicate-vs-invalidate races;
+  * **coherent invalidation**: a write or delete of a partition removes
+    every pilot replica before/after the home copy changes, so two pilots
+    can read the same partition concurrently and never observe a stale
+    value after a write completes (the follow-on two-level-storage paper,
+    arXiv:1508.01847, motivates exactly this replicated node-local store).
+
+Capacity stays per-pilot: a replica landing in a full pilot demotes that
+pilot's own data through *its* hierarchy (device -> host -> file), or is
+refused outright when it cannot fit anywhere in the pilot — replication
+never silently expands a pilot's memory ask.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core.memory import TIERS
+from repro.core.tiering import CapacityError, TierManager
+
+_N_STRIPES = 32
+
+
+class PilotDataService:
+    """Registry + mover for per-pilot DataUnit replicas.
+
+    Pilots join with `register_pilot` (they must carry a TierManager — the
+    per-pilot managed memory provisioned from `memory_gb`); DataUnits join
+    with `register`, after which their pilot-aware reads, prefetches, and
+    coherence flow through this service.
+    """
+
+    def __init__(self, max_workers: int = 4):
+        self._managers: Dict[str, TierManager] = {}   # pilot id -> manager
+        self._replicas: Dict[str, Set[str]] = {}      # key -> pilot ids
+        self._lock = threading.Lock()                 # registry metadata
+        self._stripes = [threading.Lock() for _ in range(_N_STRIPES)]
+        self._inflight: Dict[tuple, Future] = {}
+        self._closed = False
+        self._executor = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="pds-replicator")
+        self.events: List[dict] = []
+        self.counters: Dict[str, int] = {
+            "replications": 0, "pulls": 0, "invalidations": 0,
+            "replicate_refused": 0}
+
+    # -- membership ------------------------------------------------------
+    def register_pilot(self, pilot) -> "PilotDataService":
+        tm = getattr(pilot, "tier_manager", None)
+        if tm is None:
+            raise ValueError(
+                f"pilot {pilot.id} has no TierManager: provision it with "
+                "memory_gb (or attach_tier_manager) before registering")
+        with self._lock:
+            self._managers[pilot.id] = tm
+        return self
+
+    def unregister_pilot(self, pilot_id: str) -> None:
+        """Forget a pilot: its manager stops serving replicas and its ids
+        leave the registry (the data in its tiers is the releaser's to
+        clean up, usually via PilotCompute.cancel -> TierManager.close)."""
+        with self._lock:
+            self._managers.pop(pilot_id, None)
+            for pids in self._replicas.values():
+                pids.discard(pilot_id)
+
+    def register(self, du) -> "DataUnit":  # noqa: F821 - forward ref
+        du.pilot_data_service = self
+        return du
+
+    def knows(self, pilot_id: str) -> bool:
+        return pilot_id in self._managers
+
+    def pilot_ids(self) -> List[str]:
+        with self._lock:
+            return list(self._managers)
+
+    def manager_for(self, pilot_id: str) -> Optional[TierManager]:
+        return self._managers.get(pilot_id)
+
+    # -- queries ---------------------------------------------------------
+    def _stripe(self, key: str) -> threading.Lock:
+        return self._stripes[hash(key) % _N_STRIPES]
+
+    def _holds(self, pilot_id: str, key: str) -> bool:
+        with self._lock:
+            return pilot_id in self._replicas.get(key, ())
+
+    def holders(self, key: str) -> List[str]:
+        """Pilots holding a replica of `key`, in registration order."""
+        with self._lock:
+            pids = self._replicas.get(key, ())
+            return [pid for pid in self._managers if pid in pids]
+
+    def tier_on(self, key: str, pilot_id: str) -> Optional[str]:
+        """The tier `key` currently occupies inside `pilot_id` (live from
+        the pilot's TierManager, so demotions are always reflected)."""
+        if not self._holds(pilot_id, key):
+            return None
+        tm = self._managers.get(pilot_id)
+        return tm.tier_of(key) if tm is not None else None
+
+    def residency(self, du, pilot_id: str) -> Dict[str, int]:
+        """Partition count per tier of `du` inside one pilot."""
+        out: Dict[str, int] = {}
+        for i in range(du.num_partitions):
+            t = self.tier_on(du._key(i), pilot_id)
+            if t is not None:
+                out[t] = out.get(t, 0) + 1
+        return out
+
+    def resident_fraction(self, du, pilot_id: str, tier: str) -> float:
+        if du.num_partitions == 0:
+            return 0.0
+        return self.residency(du, pilot_id).get(tier, 0) / du.num_partitions
+
+    def local_fraction(self, du, pilot_id: str) -> float:
+        """Fraction of `du` resident in the pilot at *any* tier."""
+        if du.num_partitions == 0:
+            return 0.0
+        return sum(self.residency(du, pilot_id).values()) / du.num_partitions
+
+    def best_pilot(self, key: str,
+                   candidates: Sequence[str]) -> Optional[str]:
+        """The candidate holding `key` at the hottest tier (ties resolve to
+        the earliest candidate, keeping placement deterministic)."""
+        best, best_rank = None, -1
+        for pid in candidates:
+            t = self.tier_on(key, pid)
+            if t is None:
+                continue
+            rank = TIERS.index(t)
+            if rank > best_rank:
+                best, best_rank = pid, rank
+        return best
+
+    # -- replication -----------------------------------------------------
+    def replicate(self, du, i: int, pilot_id: str,
+                  tier: str = "device") -> str:
+        """Ensure partition `i` of `du` is resident in `pilot_id`, copying
+        it in from the home placement (or another replica) when absent and
+        promoting it toward `tier` when already held colder.  Returns the
+        tier the replica occupies; raises CapacityError when the partition
+        cannot fit anywhere in the pilot's hierarchy."""
+        tm = self._managers.get(pilot_id)
+        if tm is None:
+            raise KeyError(f"unknown pilot {pilot_id!r}")
+        key = du._key(i)
+        with self._stripe(key):
+            if self._holds(pilot_id, key) and tm.tier_of(key) is not None:
+                if tier in tm.backends:
+                    try:
+                        return tm.stage(key, tier)   # no-op when already hot
+                    except CapacityError:
+                        pass
+                return tm.tier_of(key) or tier
+            val = self._fetch(du, i, exclude=pilot_id)
+            dst = tier if tier in tm.backends else tm.order[-1]
+            try:
+                tm.put(key, np.asarray(val), dst)
+            except CapacityError:
+                with self._lock:
+                    self.counters["replicate_refused"] += 1
+                self.events.append({"op": "replicate-refused", "key": key,
+                                    "pilot": pilot_id, "tier": dst})
+                raise
+            with self._lock:
+                self._replicas.setdefault(key, set()).add(pilot_id)
+                self.counters["replications"] += 1
+            self.events.append({"op": "replicate", "key": key,
+                                "pilot": pilot_id, "tier": dst})
+            return dst
+
+    def replicate_async(self, du, i: int, pilot_id: str,
+                        tier: str = "device") -> Future:
+        """Queue `replicate` on the background pool (pre-binding stage-in).
+        The future resolves to the landed tier, or None when the copy was
+        refused for capacity / the partition vanished — never raises."""
+        with self._lock:
+            if self._closed:
+                fut: Future = Future()
+                fut.set_result(None)
+                return fut
+            token = (du._key(i), pilot_id)
+            fut = self._inflight.get(token)
+            if fut is not None and not fut.done():
+                return fut
+            for k in [k for k, f in self._inflight.items() if f.done()]:
+                del self._inflight[k]
+            fut = self._executor.submit(
+                self._replicate_task, du, i, pilot_id, tier)
+            self._inflight[token] = fut
+            return fut
+
+    def _replicate_task(self, du, i, pilot_id, tier) -> Optional[str]:
+        try:
+            return self.replicate(du, i, pilot_id, tier)
+        except (CapacityError, KeyError):
+            return None
+
+    def replicate_to_pilot(self, du, pilot_id: str,
+                           parts: Optional[Sequence[int]] = None,
+                           tier: str = "device") -> Dict[int, str]:
+        """Synchronously replicate `parts` (default: all partitions) of
+        `du` into a pilot; returns {partition: landed tier} for the copies
+        that fit (capacity-refused or vanished partitions are skipped, not
+        forced; an unregistered pilot raises)."""
+        if pilot_id not in self._managers:
+            raise KeyError(f"unknown pilot {pilot_id!r}: register it with "
+                           "register_pilot first")
+        out: Dict[int, str] = {}
+        for i in (range(du.num_partitions) if parts is None else parts):
+            try:
+                out[i] = self.replicate(du, i, pilot_id, tier)
+            except (CapacityError, KeyError):
+                continue
+        return out
+
+    # -- reads -----------------------------------------------------------
+    def read(self, du, i: int, pilot_id: str, device: bool = False,
+             pull_tier: str = "device"):
+        """Read partition `i` *as the pilot*: hit the pilot's own tiers when
+        a replica is resident (recording heat in that pilot's manager),
+        else pull the partition through into the pilot (replicate-on-read)
+        so subsequent iterations stay node-local.  A partition too large to
+        cache in the pilot is served from its home without caching."""
+        key = du._key(i)
+        tm = self._managers.get(pilot_id)
+        if tm is None:
+            return du.partition_device(i) if device else du.partition(i)
+        if self._holds(pilot_id, key):
+            try:
+                return tm.get_device(key) if device else tm.get(key)
+            except (KeyError, FileNotFoundError):
+                pass    # invalidated under us; fall through to a re-pull
+        try:
+            self.replicate(du, i, pilot_id, pull_tier)
+            return tm.get_device(key) if device else tm.get(key)
+        except CapacityError:
+            with self._lock:
+                self.counters["pulls"] += 1
+            return du.partition_device(i) if device else du.partition(i)
+        except (KeyError, FileNotFoundError):
+            # deleted while pulling: the home read gives the truth (and
+            # raises KeyError if the partition is truly gone)
+            return du.partition_device(i) if device else du.partition(i)
+
+    def _fetch(self, du, i: int, exclude: Optional[str] = None):
+        """Source a partition's bytes: home placement first, then any other
+        replica holder (survives a released home tier)."""
+        key = du._key(i)
+        try:
+            return du.partition(i)
+        except (KeyError, FileNotFoundError):
+            pass
+        for pid in self.holders(key):
+            if pid == exclude:
+                continue
+            tm = self._managers.get(pid)
+            if tm is None:
+                continue
+            try:
+                return tm.get(key)
+            except (KeyError, FileNotFoundError):
+                continue
+        raise KeyError(key)
+
+    # -- coherence -------------------------------------------------------
+    def invalidate(self, du, i: Optional[int] = None,
+                   keep: Optional[str] = None) -> int:
+        """Drop pilot replicas of partition `i` (or of every partition) —
+        the write/delete coherence path.  `keep` preserves one pilot's
+        replica (used when that pilot just produced the new value).
+        Returns the number of replicas removed."""
+        idxs = range(du.num_partitions) if i is None else (i,)
+        removed = 0
+        for j in idxs:
+            key = du._key(j)
+            with self._stripe(key):
+                with self._lock:
+                    pids = self._replicas.pop(key, set())
+                    if keep is not None and keep in pids:
+                        self._replicas[key] = {keep}
+                dropped = 0
+                for pid in pids:
+                    if pid == keep:
+                        continue
+                    tm = self._managers.get(pid)
+                    if tm is not None:
+                        tm.delete(key)
+                        dropped += 1
+                if dropped:
+                    self.events.append({"op": "invalidate", "key": key,
+                                        "replicas": dropped})
+                removed += dropped
+        with self._lock:
+            self.counters["invalidations"] += removed
+        return removed
+
+    # -- telemetry / shutdown -------------------------------------------
+    def stats(self) -> Dict[str, dict]:
+        """Per-pilot TierManager stats (usage/budget/entries per tier)."""
+        with self._lock:
+            managers = dict(self._managers)
+        return {pid: tm.stats() for pid, tm in managers.items()}
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        with self._lock:
+            futs = list(self._inflight.values())
+        for f in futs:
+            if not f.cancelled():
+                try:
+                    f.result(timeout)
+                except Exception:   # noqa: BLE001 - refusals are normal
+                    pass
+
+    def close(self) -> None:
+        """Stop the replicator pool (idempotent; registry stays readable)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._executor.shutdown(wait=True, cancel_futures=True)
+        with self._lock:
+            self._inflight.clear()
+
+    def __repr__(self) -> str:
+        with self._lock:
+            return (f"PilotDataService(pilots={len(self._managers)}, "
+                    f"replicated_keys={len(self._replicas)})")

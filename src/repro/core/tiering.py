@@ -35,9 +35,18 @@ an eviction decision, so LRU/GDSF victim selection still sees exact
 recency and frequency.
 
 A partition (key) is resident in exactly one managed tier at a time.
-Moves copy to the destination *before* deleting the source and flip the
-residency metadata in between, so concurrent readers observe
-either-tier-consistent data and never a hole.
+Moves — explicit stages *and* pressure demotions — copy to the destination
+*before* deleting the source and flip the residency metadata in between,
+so concurrent readers observe either-tier-consistent data and never a
+hole.  The copy itself always runs outside the metadata lock (demotion
+victims are fenced with the `_moving` marker while their bytes drain to
+the colder tier), so a throttled cold tier never serializes concurrent
+readers or stagers during reservation.
+
+Multi-pilot note: one TierManager manages ONE pilot's tiers.  Cross-pilot
+replication and coherence live a layer up in
+repro.core.pilotdata.PilotDataService, which owns the mapping from
+partition keys to the set of per-pilot managers holding a replica.
 """
 from __future__ import annotations
 
@@ -377,57 +386,110 @@ class TierManager:
         for key, tier in promote:
             self.stage_async(key, tier)
 
-    def _make_room(self, tier: str, need: int, exclude: frozenset) -> None:
-        """Demote policy-chosen entries until `need` fits in `tier`."""
+    def _fits_locked(self, tier: str, need: int) -> bool:
+        """Whether charging `need` bytes keeps `tier` within budget (meta
+        lock held). Raises CapacityError when `need` can never fit."""
         budget = self.budgets.get(tier)
         if budget is None or need <= 0:
-            return
+            return True
         if need > budget:
             raise CapacityError(
                 f"{need} bytes exceed the whole {tier!r} budget ({budget})")
-        # eviction decisions must see exact recency/frequency
-        self._apply_ledger_locked(allow_promote=False)
-        while self._usage[tier] + need > budget:
+        return self._usage[tier] + need <= budget
+
+    def _evict_one(self, tier: str, exclude: frozenset,
+                   deadline: float) -> None:
+        """Demote one policy-chosen victim out of `tier`, with the data copy
+        performed OUTSIDE the metadata lock (the same copy-first/delete-last
+        protocol as `stage`), so a slow write into a throttled colder tier
+        no longer serializes concurrent readers and stagers during
+        reservation.  Returns after one demotion landed — or after a short
+        wait when victims are mid-move and may free room on their own — and
+        the caller re-tests the budget; raises CapacityError when the tier
+        holds nothing evictable at all."""
+        with self._meta:
+            # eviction decisions must see exact recency/frequency
+            self._apply_ledger_locked(allow_promote=False)
             victims = [e for e in self._entries.values()
                        if e.tier == tier and not e.pinned
                        and e.key not in exclude
                        and e.key not in self._moving]
             if not victims:
-                raise CapacityError(
-                    f"tier {tier!r} over budget and nothing evictable "
-                    f"(usage={self._usage[tier]}, need={need}, "
-                    f"budget={budget})")
+                moving_here = any(e.tier == tier and e.key in self._moving
+                                  for e in self._entries.values())
+                if not moving_here:
+                    raise CapacityError(
+                        f"tier {tier!r} over budget and nothing evictable "
+                        f"(usage={self._usage[tier]}, "
+                        f"budget={self.budgets.get(tier)})")
+                victim = None
+            else:
+                if self.hysteresis:
+                    # prefer victims past their promotion hold-down;
+                    # capacity is a hard constraint, so fall back to all
+                    now = self._now()
+                    settled = [e for e in victims
+                               if e.no_demote_until <= now]
+                    victims = settled or victims
+                victim = self.policy.select_victim(tier, victims, self)
+                dst = self._colder(tier)
+                if dst is None:
+                    raise CapacityError(
+                        f"cannot evict {victim.key!r}: {tier!r} is the "
+                        "coldest tier")
+                self.policy.on_evict(tier, victim, self)
+                self._moving.add(victim.key)
+                key, nbytes = victim.key, victim.nbytes
+        if victim is None:
+            time.sleep(0.001)   # an in-flight move may free the room
+            return
+        charged = False
+        try:
+            # reserve room in the colder tier (may recurse further down)
+            while True:
+                with self._meta:
+                    if self._fits_locked(dst, nbytes):
+                        self._charge(dst, nbytes)
+                        charged = True
+                        break
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"eviction contention on tier {tier!r}")
+                self._evict_one(dst, exclude | {key}, deadline)
+            # the copy itself: readers and stagers proceed meanwhile
+            val = self.backends[tier].get(key)
+            self.backends[dst].put(key, val)
+        except (KeyError, FileNotFoundError):
+            # victim deleted mid-demotion: its space is already freed
+            with self._meta:
+                if charged:
+                    self._usage[dst] -= nbytes
+                self._moving.discard(key)
+            return
+        except BaseException:
+            with self._meta:
+                if charged:
+                    self._usage[dst] -= nbytes
+                self._moving.discard(key)
+            raise
+        with self._meta:
+            e = self._entries.get(key)
+            if e is None:       # deleted mid-move: drop the staged copy
+                self._usage[dst] -= nbytes
+                self.backends[dst].delete(key)
+                self._moving.discard(key)
+                return
+            e.tier = dst
+            e.heat = 0          # demoted data must re-earn promotion
             if self.hysteresis:
-                # prefer victims past their promotion hold-down; capacity
-                # is a hard constraint, so fall back to the full set
-                now = self._now()
-                settled = [e for e in victims if e.no_demote_until <= now]
-                victims = settled or victims
-            victim = self.policy.select_victim(tier, victims, self)
-            self.policy.on_evict(tier, victim, self)
-            self._demote_locked(victim, exclude)
-
-    def _demote_locked(self, e: _Entry, exclude: frozenset) -> None:
-        dst = self._colder(e.tier)
-        if dst is None:
-            raise CapacityError(
-                f"cannot evict {e.key!r}: {e.tier!r} is the coldest tier")
-        src = e.tier
-        # recursive: demotion may itself displace entries in the colder tier
-        self._make_room(dst, e.nbytes, exclude | {e.key})
-        val = self.backends[src].get(e.key)
-        self._charge(dst, e.nbytes)
-        self.backends[dst].put(e.key, val)
-        e.tier = dst
-        e.heat = 0          # demoted data must re-earn promotion
-        if self.hysteresis:
-            e.no_promote_until = self._now() + self.hysteresis
-        self._usage[src] -= e.nbytes
-        self.backends[src].delete(e.key)
-        self.counters["demotions"] += 1
-        self.counters["bytes_demoted"] += e.nbytes
-        self.events.append({"op": "demote", "key": e.key, "from": src,
-                            "to": dst, "bytes": e.nbytes})
+                e.no_promote_until = self._now() + self.hysteresis
+            self._usage[tier] -= nbytes
+            self.backends[tier].delete(key)
+            self._moving.discard(key)
+            self.counters["demotions"] += 1
+            self.counters["bytes_demoted"] += nbytes
+            self.events.append({"op": "demote", "key": key, "from": tier,
+                                "to": dst, "bytes": nbytes})
 
     # -- placement ------------------------------------------------------
     def put(self, key: str, value, tier: str, pinned: bool = False) -> None:
@@ -442,33 +504,37 @@ class TierManager:
         nbytes = int(arr.nbytes)
         deadline = time.monotonic() + 30.0
         while True:
+            evict = False
             with self._meta:
                 if key not in self._moving:
-                    self._put_locked(key, arr, nbytes, tier, pinned)
-                    return
+                    old = self._entries.get(key)
+                    freed = old.nbytes if (old is not None
+                                           and old.tier == tier) else 0
+                    # reserve before touching the old copy, so a
+                    # CapacityError here leaves it intact (the "never lost
+                    # to pressure" guarantee)
+                    if self._fits_locked(tier, nbytes - freed):
+                        self._usage[tier] -= freed
+                        self._charge(tier, nbytes)
+                        try:
+                            self.backends[tier].put(key, arr)
+                        except Exception:
+                            self._usage[tier] += freed - nbytes
+                            raise
+                        if old is not None and old.tier != tier:
+                            self._usage[old.tier] -= old.nbytes
+                            self.backends[old.tier].delete(key)
+                        self._entries[key] = _Entry(
+                            key, tier, nbytes, pinned=pinned,
+                            last_access=self._tick_next())
+                        return
+                    evict = True
             if time.monotonic() > deadline:
                 raise RuntimeError(f"staging contention on {key!r}")
-            time.sleep(0.001)   # key mid-move; wait for the stager
-
-    def _put_locked(self, key: str, arr, nbytes: int, tier: str,
-                    pinned: bool) -> None:
-        old = self._entries.get(key)
-        freed = old.nbytes if (old is not None and old.tier == tier) else 0
-        # reserve before touching the old copy, so a CapacityError here
-        # leaves it intact (the "never lost to pressure" guarantee)
-        self._make_room(tier, nbytes - freed, frozenset({key}))
-        self._usage[tier] -= freed
-        self._charge(tier, nbytes)
-        try:
-            self.backends[tier].put(key, arr)
-        except Exception:
-            self._usage[tier] += freed - nbytes
-            raise
-        if old is not None and old.tier != tier:
-            self._usage[old.tier] -= old.nbytes
-            self.backends[old.tier].delete(key)
-        self._entries[key] = _Entry(key, tier, nbytes, pinned=pinned,
-                                    last_access=self._tick_next())
+            if evict:
+                self._evict_one(tier, frozenset({key}), deadline)
+            else:
+                time.sleep(0.001)   # key mid-move; wait for the stager
 
     def delete(self, key: str) -> None:
         with self._meta:
@@ -484,13 +550,20 @@ class TierManager:
         DataUnit) so it participates in budgets/eviction/heat."""
         if nbytes is None:
             nbytes = self.backends[tier].nbytes(key)
-        with self._meta:
-            if key in self._entries:
-                return
-            self._make_room(tier, nbytes, frozenset({key}))
-            self._charge(tier, nbytes)
-            self._entries[key] = _Entry(key, tier, int(nbytes), pinned=pinned,
-                                        last_access=self._tick_next())
+        deadline = time.monotonic() + 30.0
+        while True:
+            with self._meta:
+                if key in self._entries:
+                    return
+                if self._fits_locked(tier, int(nbytes)):
+                    self._charge(tier, int(nbytes))
+                    self._entries[key] = _Entry(
+                        key, tier, int(nbytes), pinned=pinned,
+                        last_access=self._tick_next())
+                    return
+            if time.monotonic() > deadline:
+                raise RuntimeError(f"adoption contention on {key!r}")
+            self._evict_one(tier, frozenset({key}), deadline)
 
     # -- access ---------------------------------------------------------
     def get(self, key: str) -> np.ndarray:
@@ -545,7 +618,7 @@ class TierManager:
     def _after_read(self, key: str) -> None:
         flush, pending = self._ledger.record(key, self._tick_next())
         if not flush and self.promote_threshold:
-            # non-promoting drains (_make_room, stats) may have consumed
+            # non-promoting drains (eviction, stats) may have consumed
             # part of this key's window while its accumulated heat kept
             # growing; a lock-free peek over drained heat + pending window
             # keeps the PR 1 guarantee that the threshold-th read triggers
@@ -589,6 +662,8 @@ class TierManager:
             raise KeyError(f"no backend for tier {tier!r}")
         deadline = time.monotonic() + 30.0
         while True:
+            evict = False
+            reserved = False
             with self._meta:
                 e = self._entries.get(key)
                 if e is None:
@@ -599,13 +674,20 @@ class TierManager:
                         self._touch(e)
                         return tier
                     nbytes = e.nbytes
-                    self._make_room(tier, nbytes, frozenset({key}))
-                    self._charge(tier, nbytes)
-                    self._moving.add(key)
-                    break
+                    if self._fits_locked(tier, nbytes):
+                        self._charge(tier, nbytes)
+                        self._moving.add(key)
+                        reserved = True
+                    else:
+                        evict = True
+            if reserved:
+                break
             if time.monotonic() > deadline:
                 raise RuntimeError(f"staging contention on {key!r}")
-            time.sleep(0.001)   # another mover has this key; wait it out
+            if evict:
+                self._evict_one(tier, frozenset({key}), deadline)
+            else:
+                time.sleep(0.001)   # another mover has this key; wait it out
         try:
             val = self.backends[src].get(key)      # outside the lock:
             self.backends[tier].put(key, val)      # reads proceed meanwhile
@@ -747,3 +829,22 @@ def make_tier_manager(*, device_budget: Optional[int] = None,
     return TierManager(backends, budgets, promote_threshold=promote_threshold,
                        policy=policy, hysteresis=hysteresis,
                        max_workers=max_workers)
+
+
+def tier_manager_for_pilot(desc, mesh=None) -> Optional[TierManager]:
+    """Per-pilot managed memory from a PilotComputeDescription resource ask
+    (shared by the backend adaptors; None when no memory_gb was asked).
+
+    The YARN-style `memory_gb` becomes the pilot's device-tier budget and
+    `host_memory_gb` (optional) its host-tier budget: DUs placed — or
+    replicated by the PilotDataService — into this manager are retained in
+    the pilot's HBM share up to the ask and demoted through its own host
+    tier beyond it, making each pilot a separate locality domain."""
+    if not getattr(desc, "memory_gb", 0):
+        return None
+    return make_tier_manager(
+        device_budget=int(desc.memory_gb * 2 ** 30),
+        host_budget=(int(desc.host_memory_gb * 2 ** 30)
+                     if desc.host_memory_gb else None),
+        mesh=mesh, policy=desc.eviction_policy,
+        hysteresis=desc.hysteresis, max_workers=desc.stager_workers)

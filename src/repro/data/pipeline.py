@@ -59,17 +59,25 @@ class BatchPipeline:
     the manager's thread-pool stager via depth-`stage_depth` prefetch
     hints, so training input staging shares the same tier budgets, heat
     accounting, and eviction policy as analytics DataUnits (one budget
-    model across the system); an unmanaged DU degrades to plain reads."""
+    model across the system); an unmanaged DU degrades to plain reads.
+
+    With `pilot` set (and the DU bound to a PilotDataService) shard reads
+    and prefetches route through THAT pilot's own TierManager instead:
+    the training input stream rides the pilot's per-pilot budget and
+    replica residency, so a trainer pinned to one pilot stages against
+    the memory it actually owns rather than a global pool."""
 
     def __init__(self, du: DataUnit, cfg: ModelConfig, batch: int,
                  seq_len: int, prefetch: int = 2, seed: int = 0,
-                 stage_depth: int = 2, stage_tier: str = "host"):
+                 stage_depth: int = 2, stage_tier: str = "host",
+                 pilot=None):
         self.du = du
         self.cfg = cfg
         self.batch = batch
         self.seq_len = seq_len
         self.stage_depth = stage_depth
         self.stage_tier = stage_tier
+        self.pilot = pilot
         self.tokens_per_batch = batch * (seq_len + 1)
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
@@ -89,9 +97,11 @@ class BatchPipeline:
                 # keep the next shards in flight on the shared stager while
                 # this one is sliced (budget-refused stages are harmless)
                 self.du.prefetch_window(shard_idx + 1, self.stage_depth,
-                                        self.stage_tier, wrap=True)
+                                        self.stage_tier, wrap=True,
+                                        pilot=self.pilot)
                 part = np.asarray(
-                    self.du.partition(shard_idx % self.du.num_partitions))
+                    self.du.partition(shard_idx % self.du.num_partitions,
+                                      pilot=self.pilot))
                 shard_idx += 1
                 buf = np.concatenate([buf, part.reshape(-1)])
             take, buf = (buf[:self.tokens_per_batch],

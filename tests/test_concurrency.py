@@ -146,6 +146,53 @@ def test_budgeted_staging_hammer_respects_budget(tmp_path):
     tm.close()
 
 
+def test_demotion_copy_runs_off_the_metadata_lock(tmp_path):
+    """Pressure demotion uses the same copy-first/delete-last protocol as
+    `stage`: while a victim's bytes drain into a (gated) cold tier, the
+    metadata lock is free — concurrent stages of OTHER keys complete and
+    the manager stays introspectable — and the move lands atomically."""
+    from repro.core.memory import FileBackend
+
+    gate = threading.Event()
+    copy_started = threading.Event()
+
+    class GatedFile(FileBackend):
+        def put(self, name, value):
+            if name == "victim":
+                copy_started.set()
+                assert gate.wait(20)
+            super().put(name, value)
+
+    kb = 1024
+    tm = TierManager({"file": GatedFile(tmp_path),
+                      "host": make_backend("host")},
+                     {"host": 2 * kb}, promote_threshold=0)
+    tm.put("victim", np.zeros(kb // 4, np.float32), "host")
+    tm.put("other", np.ones(kb // 4, np.float32), "host")
+    tm.get("other")                       # victim is now the LRU entry
+
+    t = threading.Thread(                 # displaces victim -> gated demote
+        target=tm.put,
+        args=("new", np.full(kb // 4, 2.0, np.float32), "host"))
+    t.start()
+    assert copy_started.wait(10)
+    # the demote copy is in flight and blocked on the gate; metadata-lock
+    # holders must still make progress
+    assert tm.stage("other", "file") == "file"
+    assert tm.tier_of("victim") == "host"     # flip happens copy-first
+    np.testing.assert_array_equal(tm.get("victim"),
+                                  np.zeros(kb // 4, np.float32))
+    gate.set()
+    t.join(20)
+    assert not t.is_alive()
+    assert tm.tier_of("victim") == "file"
+    assert tm.tier_of("new") == "host"
+    assert tm.usage("host") <= 2 * kb
+    np.testing.assert_array_equal(tm.get("victim"),
+                                  np.zeros(kb // 4, np.float32))
+    tm.close()
+
+
 def test_stager_close_drains_inflight_deterministically(tmp_path):
     """close() with moves in flight: queued stages are cancelled, running
     ones land atomically, stager threads are joined (no leaks between

@@ -111,6 +111,46 @@ def test_batch_pipeline_stages_through_shared_tier_budget(tmp_path):
         assert not pipe._thread.is_alive()
 
 
+def test_adaptive_depth_tracks_stage_vs_compute_ratio():
+    from repro.core.mapreduce import _AdaptiveDepth
+
+    # no observations yet: the PR 2 default depth applies
+    assert _AdaptiveDepth(seed_stage=0.5).depth == 2
+    # staging 6x compute (profile-seeded) -> depth 6
+    ad = _AdaptiveDepth(seed_stage=0.012)
+    for _ in range(4):
+        ad.observe(compute_s=0.002, wait_s=0.0)
+    assert ad.depth == 6
+    # compute-dominated -> one look-ahead suffices
+    ad = _AdaptiveDepth(seed_stage=0.0)
+    for _ in range(4):
+        ad.observe(compute_s=0.01, wait_s=0.0005)
+    assert ad.depth == 1
+    # observed waits override an optimistic (zero) profile seed
+    ad = _AdaptiveDepth(seed_stage=0.0)
+    for _ in range(6):
+        ad.observe(compute_s=0.001, wait_s=0.004)
+    assert ad.depth >= 3
+    # clamped to max_depth
+    ad = _AdaptiveDepth(seed_stage=10.0)
+    ad.observe(compute_s=1e-4)
+    assert ad.depth == ad.max_depth
+
+
+def test_adaptive_default_depth_matches_reference(tmp_path):
+    """prefetch_depth=None (the new default) runs the adaptive engine and
+    still produces the exact sequential result on a managed cold DU."""
+    arr = np.arange(64 * 8, dtype=np.float32).reshape(64, 8)
+    tm = _tm(tmp_path)
+    du = DataUnit.from_array("ad", arr, 8, tm.backends, tier="file",
+                             tier_manager=tm)
+    try:
+        assert _sum_mr(du) == pytest.approx(float(arr.sum()), rel=1e-5)
+        tm.drain(timeout=10)
+    finally:
+        tm.close()
+
+
 def test_unmanaged_du_pipeline_is_a_noop_fallback(tmp_path):
     backends = {"host": make_backend("host")}
     arr = np.arange(128, dtype=np.float32)

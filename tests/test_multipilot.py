@@ -1,0 +1,248 @@
+"""Multi-pilot distributed Pilot-Data: per-pilot TierManagers, the replica
+registry (consistency under concurrent replicate/evict/delete), coherent
+invalidation on writes/deletes, replica-aware scheduler placement,
+pre-binding stage-in landing before CU start, and retry excluding the
+pilot that just failed."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputeDataManager, ComputeUnitDescription, DataUnit,
+                        PilotComputeDescription, PilotComputeService,
+                        PilotDataService, TierManager, make_backend)
+from repro.core.backends.base import register_backend
+from repro.core.backends.simulated import FaultPolicy, SimulatedClusterBackend
+from repro.core.mapreduce import _replica_groups
+
+KB = 1024
+
+
+@pytest.fixture
+def service():
+    svc = PilotComputeService()
+    yield svc
+    svc.cancel_all()
+
+
+def _pilot(svc, pds, device_budget=None):
+    """An inprocess pilot with its own private TierManager."""
+    pilot = svc.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    pilot.attach_tier_manager(TierManager(
+        {"host": make_backend("host"), "device": make_backend("device")},
+        {"device": device_budget}, promote_threshold=0))
+    pds.register_pilot(pilot)
+    return pilot
+
+
+def _home_du(name, parts=4, rows=64):
+    arr = np.arange(parts * rows * 4, dtype=np.float32).reshape(-1, 4)
+    return DataUnit.from_array(name, arr, parts,
+                               {"host": make_backend("host")}, tier="host")
+
+
+def test_replica_readable_from_both_pilots_with_coherent_delete(service):
+    pds = PilotDataService()
+    a, b = _pilot(service, pds), _pilot(service, pds)
+    du = pds.register(_home_du("rep"))
+    ref = np.asarray(du.partition(0)).copy()
+    du.replicate_to_pilot(a, parts=[0])
+    du.replicate_to_pilot(b, parts=[0])
+    key = du._key(0)
+    assert set(pds.holders(key)) == {a.id, b.id}
+    # both pilots serve the partition from their OWN tiers
+    np.testing.assert_array_equal(du.partition(0, pilot=a), ref)
+    np.testing.assert_array_equal(du.partition(0, pilot=b), ref)
+    assert a.tier_manager.tier_of(key) == "device"
+    assert b.tier_manager.tier_of(key) == "device"
+    # coherent delete: every replica AND the home copy are gone
+    du.delete()
+    assert pds.holders(key) == []
+    assert a.tier_manager.tier_of(key) is None
+    assert b.tier_manager.tier_of(key) is None
+    with pytest.raises(KeyError):
+        du.partition(0)
+    pds.close()
+
+
+def test_update_partition_invalidates_stale_replicas(service):
+    pds = PilotDataService()
+    a, b = _pilot(service, pds), _pilot(service, pds)
+    du = pds.register(_home_du("wr"))
+    du.replicate_to_pilot(a)
+    du.replicate_to_pilot(b)
+    fresh = np.full_like(np.asarray(du.partition(1)), 42.0)
+    du.update_partition(1, fresh)
+    # the write dropped both replicas; reads re-pull the new value
+    assert pds.holders(du._key(1)) == []
+    np.testing.assert_array_equal(du.partition(1, pilot=a), fresh)
+    np.testing.assert_array_equal(du.partition(1, pilot=b), fresh)
+    # the pull-through re-established pilot-a's replica
+    assert pds.tier_on(du._key(1), a.id) is not None
+    pds.close()
+
+
+def test_pull_through_read_caches_in_pilot_and_respects_budget(service):
+    pds = PilotDataService()
+    du = pds.register(_home_du("pull", parts=4))
+    part_bytes = du.nbytes() // 4
+    # room for only two partitions on-device; overflow demotes to pilot host
+    a = _pilot(service, pds, device_budget=2 * part_bytes + part_bytes // 2)
+    for i in range(4):
+        du.partition(i, pilot=a)
+    res = du.replica_residency(a)
+    assert sum(res.values()) == 4               # pilot holds every partition
+    assert res.get("device", 0) == 2            # but only 2 fit its budget
+    assert a.tier_manager.peak_usage("device") <= (
+        2 * part_bytes + part_bytes // 2)
+    pds.close()
+
+
+def test_scheduler_places_cu_on_majority_replica_holder(service):
+    pds = PilotDataService()
+    a, b = _pilot(service, pds), _pilot(service, pds)
+    du = pds.register(_home_du("sched", parts=4))
+    du.replicate_to_pilot(a, parts=[3])
+    du.replicate_to_pilot(b, parts=[0, 1, 2])
+    manager = ComputeDataManager(service)
+    desc = ComputeUnitDescription(fn=lambda: "done", input_data=(du,))
+    assert manager.score(b, desc) > manager.score(a, desc)
+    cu = manager.submit(desc)
+    assert cu.result(30) == "done"
+    assert manager.history[-1]["pilot"] == b.id
+    pds.close()
+
+
+def test_replica_groups_sticky_and_balanced(service):
+    pds = PilotDataService()
+    a, b = _pilot(service, pds), _pilot(service, pds)
+    du = pds.register(_home_du("grp", parts=6))
+    du.replicate_to_pilot(b, parts=[0, 4])
+    manager = ComputeDataManager(service)
+    groups = dict((p.id, idxs) for p, idxs in _replica_groups(du, manager))
+    # held partitions stick to their holder; the rest balance the load
+    assert set(groups[b.id]) >= {0, 4}
+    assert len(groups[a.id]) == 3 and len(groups[b.id]) == 3
+    assert sorted(groups[a.id] + groups[b.id]) == list(range(6))
+    pds.close()
+
+
+def test_prebinding_stage_in_lands_before_cu_start(service):
+    pds = PilotDataService()
+    a = _pilot(service, pds)
+    du = pds.register(_home_du("bind", parts=4))
+    manager = ComputeDataManager(service)
+
+    def probe():
+        # runs INSIDE the CU: the declared first partitions must already
+        # be resident in the executing pilot when the body starts
+        return (pds.tier_on(du._key(0), a.id) is not None
+                and pds.tier_on(du._key(1), a.id) is not None)
+
+    cu = manager.submit(ComputeUnitDescription(
+        fn=probe, input_data=(du,), prefetch_parts=(0, 1)))
+    assert cu.prebind_futures           # stage-in was queued at bind time
+    assert cu.result(30) is True
+    pds.close()
+
+
+def test_result_with_retry_excludes_failed_pilot(service):
+    register_backend(SimulatedClusterBackend(
+        substrate="slurm", policy=FaultPolicy(fail_cu_ids=frozenset({"job"}))))
+    flaky = service.submit_pilot(PilotComputeDescription(
+        backend="simulated", affinity="fast"))
+    backup = service.submit_pilot(PilotComputeDescription(
+        backend="inprocess"))
+    manager = ComputeDataManager(service)
+    # the affinity bonus makes the flaky pilot the scheduler's first choice,
+    # so only the failure-exclusion can move the retry off it
+    desc = ComputeUnitDescription(fn=lambda: "ok", name="job",
+                                  affinity="fast")
+    assert manager.result_with_retry(desc, retries=2) == "ok"
+    pilots = [h["pilot"] for h in manager.history[-2:]]
+    assert pilots == [flaky.id, backup.id]
+
+
+def test_single_pilot_retry_resets_exclusion(service):
+    """When every healthy pilot has failed the CU, exclusion resets instead
+    of stranding the retry in the late-binding queue."""
+    register_backend(SimulatedClusterBackend(
+        substrate="slurm",
+        policy=FaultPolicy(fail_cu_ids=frozenset({"solo"}))))
+    service.submit_pilot(PilotComputeDescription(backend="simulated"))
+    manager = ComputeDataManager(service)
+    desc = ComputeUnitDescription(fn=lambda: "ok", name="solo")
+    assert manager.result_with_retry(desc, retries=2) == "ok"
+
+
+def test_simulated_backend_provisions_per_pilot_tier_manager(service):
+    register_backend(SimulatedClusterBackend(substrate="spark"))
+    pilot = service.submit_pilot(PilotComputeDescription(
+        backend="simulated", memory_gb=0.125, host_memory_gb=0.25))
+    assert pilot.tier_manager is not None
+    assert pilot.tier_manager.budget("device") == int(0.125 * 2 ** 30)
+    assert pilot.tier_manager.budget("host") == int(0.25 * 2 ** 30)
+
+
+def test_replica_registry_consistent_under_concurrent_churn(service):
+    """Replicate / evict (budget pressure) / write-invalidate hammering:
+    the registry never desynchronizes from the per-pilot managers."""
+    pds = PilotDataService()
+    du = pds.register(_home_du("churn", parts=8))
+    part_bytes = du.nbytes() // 8
+    pilots = [_pilot(service, pds,
+                     device_budget=3 * part_bytes + part_bytes // 2)
+              for _ in range(2)]
+    stop = threading.Event()
+    errors = []
+
+    def run(fn):
+        try:
+            i = 0
+            while not stop.is_set():
+                fn(i)
+                i += 1
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+            stop.set()
+
+    def replicator(pilot):
+        def go(i):
+            du.partition(i % 8, pilot=pilot)   # pull-through replicate
+        return go
+
+    def pressurer(pilot):
+        def go(i):
+            # unrelated keys churn the pilot's device budget -> demotions
+            pilot.tier_manager.put(f"fill-{pilot.id}-{i % 4}",
+                                   np.zeros(part_bytes // 4, np.float32),
+                                   "device")
+        return go
+
+    def writer(i):
+        du.update_partition(i % 8, np.full((16, 4), float(i), np.float32))
+
+    workers = [replicator(pilots[0]), replicator(pilots[1]),
+               pressurer(pilots[0]), pressurer(pilots[1]), writer]
+    threads = [threading.Thread(target=run, args=(w,)) for w in workers]
+    for t in threads:
+        t.start()
+    stop.wait(1.5)
+    stop.set()
+    for t in threads:
+        t.join(20)
+    if errors:
+        raise errors[0]
+    pds.drain(timeout=30)
+    # invariant: the registry agrees exactly with per-pilot residency
+    for i in range(8):
+        key = du._key(i)
+        holding = {p.id for p in pilots
+                   if p.tier_manager.tier_of(key) is not None}
+        assert set(pds.holders(key)) == holding
+    # and every partition still reads coherently through every pilot
+    for i in range(8):
+        home = np.asarray(du.partition(i))
+        for p in pilots:
+            np.testing.assert_array_equal(du.partition(i, pilot=p), home)
+    pds.close()

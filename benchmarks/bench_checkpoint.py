@@ -1,0 +1,139 @@
+"""Checkpoint tier: a 3x-over-budget working set vs naive home re-staging.
+
+The scenario (ISSUE 4 acceptance): a pilot whose volatile budgets
+(device+host) hold only ~1/3 of an iterated KMeans working set, with the
+DataUnit homed on a SLOW original file store (simulated remote/parallel
+filesystem).  Two runs:
+
+  restage — no checkpoint tier: replication of the overflow is refused
+      (nothing colder than the tiny host tier), so every iteration
+      re-reads the overflow partitions from the slow home store;
+  tiered  — the same budgets plus a node-local checkpoint tier (fast
+      flash profile): the overflow spills to the durable store once and
+      iterations restore it lazily from local disk, re-promoting through
+      the same hierarchy.
+
+Both runs must agree numerically; the tiered run completing AND beating
+the restage baseline is the CI gate (BENCH_pr4.json:
+bench_checkpoint.tiered {completed, speedup_vs_restage}).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, record
+
+ITERS = 4
+DEPTH = 4
+K = 8
+
+
+def _profile(name, part_bytes, read_ms, write_ms):
+    from repro.core.memory import TierProfile
+    return TierProfile(name, simulate=True, latency=2e-4,
+                       read_bw=part_bytes / (read_ms * 1e-3),
+                       write_bw=part_bytes / (write_ms * 1e-3))
+
+
+def _run(pts: np.ndarray, parts: int, workdir: Path, with_checkpoint: bool):
+    from repro.core import (CheckpointBackend, ComputeDataManager, DataUnit,
+                            PilotComputeDescription, PilotComputeService,
+                            PilotDataService, TierManager, kmeans,
+                            make_backend)
+    from repro.core.memory import FileBackend
+
+    part_bytes = pts.nbytes // parts
+    # volatile budgets hold ~1/3 of the working set
+    device_budget = (parts // 3) * part_bytes + part_bytes // 2
+    host_budget = part_bytes // 2
+    backends = {"host": make_backend("host"),
+                "device": make_backend("device")}
+    if with_checkpoint:
+        # node-local flash: ~20x faster reads than the remote home store
+        backends["checkpoint"] = CheckpointBackend(
+            workdir / "ckpt", _profile("bench_local_flash", part_bytes,
+                                       read_ms=1.2, write_ms=0.4))
+    svc = PilotComputeService()
+    pds = PilotDataService()
+    if with_checkpoint:
+        pds.attach_checkpoint_store(backends["checkpoint"])
+    manager = ComputeDataManager(svc)
+    try:
+        pilot = svc.submit_pilot(PilotComputeDescription(
+            backend="inprocess", stager_workers=DEPTH))
+        pilot.attach_tier_manager(TierManager(
+            backends, {"device": device_budget, "host": host_budget},
+            promote_threshold=0, max_workers=DEPTH))
+        pds.register_pilot(pilot)
+        # home placement: the slow original file store every miss re-reads
+        du = pds.register(DataUnit.from_array(
+            "ck-bench", pts, parts,
+            {"file": FileBackend(workdir / "home",
+                                 _profile("bench_remote_store", part_bytes,
+                                          read_ms=25.0, write_ms=2.0))},
+            tier="file"))
+        t0 = time.perf_counter()
+        r = kmeans(du, k=K, iters=ITERS, manager=manager,
+                   prefetch_depth=DEPTH)
+        wall = time.perf_counter() - t0
+        pilot.tier_manager.drain(timeout=60)
+        tm = pilot.tier_manager
+        return wall, float(r.sse_history[-1]), {
+            "bytes_demoted": tm.counters["bytes_demoted"],
+            "bytes_promoted": tm.counters["bytes_promoted"],
+            "spilled_parts": len(tm.resident_keys("checkpoint"))
+            if with_checkpoint else 0,
+            "home_pulls": pds.counters["pulls"]}
+    finally:
+        pds.close()
+        svc.cancel_all()
+
+
+def run(quick: bool = False) -> float:
+    from repro.core import DataUnit, kmeans, make_backend, make_blobs
+
+    n, parts = (12_000, 12) if quick else (36_000, 12)
+    pts, _ = make_blobs(n, K, d=16, seed=0)
+
+    # warm the jit cache so neither run pays compile inside the timer
+    warm = DataUnit.from_array(
+        "warm-ck", pts[: n // parts], 1,
+        {"host": make_backend("host"), "device": make_backend("device")},
+        tier="device")
+    kmeans(warm, k=K, iters=1, seed=0)
+
+    root = Path(tempfile.mkdtemp(prefix="bench_checkpoint_"))
+    try:
+        wall_naive, sse_naive, stats_naive = _run(
+            pts, parts, root / "restage", with_checkpoint=False)
+        wall_ck, sse_ck, stats_ck = _run(
+            pts, parts, root / "tiered", with_checkpoint=True)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    np.testing.assert_allclose(sse_ck, sse_naive, rtol=1e-3)
+    speedup = wall_naive / max(wall_ck, 1e-9)
+    emit("bench_checkpoint.restage[sim]", wall_naive,
+         f"sse={sse_naive:.3e} home_pulls={stats_naive['home_pulls']}")
+    record("bench_checkpoint.restage", seconds=wall_naive, **stats_naive)
+    emit("bench_checkpoint.tiered[sim]", wall_ck,
+         f"speedup_vs_restage={speedup:.2f}x "
+         f"spilled={stats_ck['spilled_parts']}")
+    record("bench_checkpoint.tiered", seconds=wall_ck, completed=True,
+           speedup_vs_restage=speedup, over_budget_factor=3, **stats_ck)
+    if speedup < 1.0:
+        emit("bench_checkpoint.WARNING", 0.0,
+             f"checkpoint tier {speedup:.2f}x — slower than re-staging")
+    return speedup
+
+
+if __name__ == "__main__":
+    from benchmarks import common
+    print("name,us_per_call,derived")
+    run()
+    common.write_json("BENCH_pr4.json", meta={"mode": "standalone"})

@@ -5,11 +5,13 @@ writes the machine-readable records (per-benchmark wall time, bytes staged,
 evictions) to a JSON artifact (default ``BENCH_pr2.json``; override with
 ``--json PATH``) so the perf trajectory is tracked across PRs.
 
-``--quick`` is the CI smoke path: it runs the tiering, map_reduce, and
-multi-pilot benches, writes the artifact, and exits non-zero if the
-pipelined map_reduce engine is slower than the sequential baseline or the
-2-pilot distributed Pilot-Data run is below 1.3x the single-pilot wall
-clock on the 2x-over-budget workload.
+``--quick`` is the CI smoke path: it runs the tiering, map_reduce,
+multi-pilot, and checkpoint benches, writes the artifact, and exits
+non-zero if the pipelined map_reduce engine is slower than the sequential
+baseline, the 2-pilot distributed Pilot-Data run is below 1.3x the
+single-pilot wall clock on the 2x-over-budget workload, or the
+3x-over-budget checkpoint-tier workload fails to complete / loses to
+naive re-staging from the original file store.
 """
 from __future__ import annotations
 
@@ -21,8 +23,9 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr3.json"
+DEFAULT_JSON = "BENCH_pr4.json"
 MULTIPILOT_MIN_SPEEDUP = 1.3
+CHECKPOINT_MIN_SPEEDUP = 1.0
 
 
 def _json_path(argv) -> str:
@@ -56,25 +59,41 @@ def _gate(records) -> None:
               f"{mp.get('speedup_vs_1'):.2f}x vs 1 pilot "
               f"(target {MULTIPILOT_MIN_SPEEDUP}x)", file=sys.stderr)
         raise SystemExit(1)
+    ck = rows.get("bench_checkpoint.tiered")
+    if ck is None:
+        print("bench gate: no bench_checkpoint.tiered record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if not ck.get("completed"):
+        print("bench gate: 3x-over-budget checkpoint workload did not "
+              "complete", file=sys.stderr)
+        raise SystemExit(1)
+    if ck.get("speedup_vs_restage", 0.0) < CHECKPOINT_MIN_SPEEDUP:
+        print(f"bench gate: checkpoint tier "
+              f"{ck.get('speedup_vs_restage'):.2f}x vs naive re-staging "
+              f"(target {CHECKPOINT_MIN_SPEEDUP}x)", file=sys.stderr)
+        raise SystemExit(1)
 
 
 def main() -> None:
-    from benchmarks import (bench_fig6_startup, bench_fig7_storage,
-                            bench_fig8_profiles, bench_fig9_kmeans,
-                            bench_kernels, bench_mapreduce, bench_multipilot,
+    from benchmarks import (bench_checkpoint, bench_fig6_startup,
+                            bench_fig7_storage, bench_fig8_profiles,
+                            bench_fig9_kmeans, bench_kernels,
+                            bench_mapreduce, bench_multipilot,
                             bench_roofline, bench_tiering, bench_train_step)
     from benchmarks import common
     quick = "--quick" in sys.argv
     json_path = _json_path(sys.argv)
     print("name,us_per_call,derived")
     if quick:
-        # CI smoke: the tiering + map_reduce + multipilot benches exercise
-        # pilots, DUs, the managed hierarchy, eviction policies, the
-        # pipelined engine, and the distributed Pilot-Data layer
-        # end-to-end in a few seconds
+        # CI smoke: the tiering + map_reduce + multipilot + checkpoint
+        # benches exercise pilots, DUs, the managed hierarchy, eviction
+        # policies, the pipelined engine, the distributed Pilot-Data
+        # layer, and the durable spill/restore path end-to-end in seconds
         bench_tiering.run(quick=True)
         bench_mapreduce.run(quick=True)
         bench_multipilot.run(quick=True)
+        bench_checkpoint.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -82,8 +101,8 @@ def main() -> None:
     failures = 0
     for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
-                bench_mapreduce, bench_multipilot, bench_train_step,
-                bench_roofline):
+                bench_mapreduce, bench_multipilot, bench_checkpoint,
+                bench_train_step, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

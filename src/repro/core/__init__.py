@@ -15,7 +15,9 @@ from repro.core.analytics import KMeansResult, assign_partial, kmeans, make_blob
 from repro.core.data import DataUnit, DataUnitDescription
 from repro.core.manager import ComputeDataManager, PilotComputeService
 from repro.core.mapreduce import map_reduce
-from repro.core.memory import (PROFILES, TIERS, TierProfile, make_backend)
+from repro.core.memory import (CheckpointBackend, DURABLE_TIERS, PROFILES,
+                               TIERS, TierProfile, checkpoint_store,
+                               make_backend)
 from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription, State)
 from repro.core.pilotdata import PilotDataService
@@ -30,5 +32,6 @@ __all__ = [
     "PilotComputeDescription", "State", "kmeans", "KMeansResult",
     "assign_partial", "make_blobs", "CapacityError", "TierManager",
     "make_tier_manager", "EvictionPolicy", "LRUPolicy", "GDSFPolicy",
-    "make_policy", "PilotDataService",
+    "make_policy", "PilotDataService", "CheckpointBackend",
+    "checkpoint_store", "DURABLE_TIERS",
 ]

@@ -41,6 +41,9 @@ class FaultPolicy:
     straggle_cu_ids: frozenset = frozenset()   # CU ids to delay
     straggle_seconds: float = 0.5
     fail_devices_at: Optional[int] = None      # fail pilot after N CUs
+    lose_memory: bool = False                  # node loss wipes the pilot's
+    #                                            volatile tiers (device/host)
+    #                                            — only checkpoint survives
 
 
 class SimulatedPilot(PilotCompute):
@@ -54,6 +57,11 @@ class SimulatedPilot(PilotCompute):
                 and self._completed >= self.policy.fail_devices_at
                 and self.state == State.RUNNING):
             self.state = State.FAILED  # simulated node loss
+            if self.policy.lose_memory and self.tier_manager is not None:
+                # a dead node's RAM and HBM are gone; partitions the pilot
+                # had demoted to the durable checkpoint tier survive and
+                # stay readable (the recovery path the retry tests assert)
+                self.tier_manager.lose_volatile()
         if self.state == State.FAILED:
             cu.state = State.FAILED
             cu.future.set_exception(

@@ -275,6 +275,17 @@ class DataUnit:
             return 0.0
         return self.pilot_data_service.resident_fraction(self, pid, tier)
 
+    def persist(self, parts=None, flush: bool = False) -> List[int]:
+        """Write partitions through to the PilotDataService's durable
+        checkpoint home (the recovery source after pilot loss); requires
+        binding via `PilotDataService.register`.  Async by default —
+        `flush=True` is the durability barrier."""
+        if self.pilot_data_service is None:
+            raise RuntimeError(f"DataUnit {self.name}: not bound to a "
+                               "PilotDataService")
+        return self.pilot_data_service.persist(self, parts=parts,
+                                               flush=flush)
+
     def update_partition(self, i: int, value) -> "DataUnit":
         """Coherent write: the new value lands in the home placement and
         every per-pilot replica is invalidated, so a subsequent pilot read
@@ -351,7 +362,9 @@ class DataUnit:
             for i in range(self.num_partitions):
                 be.delete(self._key(i))
         if self.pilot_data_service is not None:
-            self.pilot_data_service.invalidate(self)
+            # drop_persistent: the durable checkpoint home must not
+            # resurrect a deleted DU through the recovery fetch path
+            self.pilot_data_service.invalidate(self, drop_persistent=True)
 
     def __repr__(self) -> str:
         return (f"DataUnit({self.name!r}, parts={self.num_partitions}, "

@@ -7,9 +7,11 @@ available Pilots, their utilization and data locality."
 TPU adaptation of locality: the expensive boundaries are host<->HBM staging
 and cross-slice transfers, so the score prefers (1) the pilot whose DEVICE
 tier already holds the CU's DataUnits, then (2) matching affinity labels,
-then (3) host-resident data, then (4) any-tier replica stickiness, then
-(5) lowest queue depth. Late binding: CUs wait in the manager queue until
-some pilot is provisioned and healthy.
+then (3) host-resident data, then (4) checkpoint-tier residency (a spilled
+partition restores from the pilot's durable node-local store, still
+beating a refetch from the home placement), then (5) any-tier replica
+stickiness, then (6) lowest queue depth. Late binding: CUs wait in the
+manager queue until some pilot is provisioned and healthy.
 
 Multi-pilot locality: when a DataUnit is bound to a PilotDataService,
 residency is *per pilot* — each pilot is scored by the fraction of the
@@ -34,9 +36,13 @@ from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription, State)
 
 # locality score weights (device residency dominates, as HBM>host>disk;
+# W_CKPT ranks checkpoint-tier residency below host but above absent — a
+# pilot that spilled a partition to its durable tier restores it from
+# node-local disk, which still beats refetching from the home store; and
 # W_LOCAL rewards any-tier replica stickiness so a pilot whose replica was
 # demoted under pressure still beats one that must refetch everything)
-W_DEVICE, W_AFFINITY, W_HOST, W_LOCAL, W_QUEUE = 100.0, 10.0, 5.0, 2.0, 1.0
+W_DEVICE, W_AFFINITY, W_HOST, W_CKPT, W_LOCAL, W_QUEUE = (
+    100.0, 10.0, 5.0, 3.0, 2.0, 1.0)
 
 
 class PilotComputeService:
@@ -125,13 +131,19 @@ class ComputeDataManager:
                     res = pds.residency(du, pilot.id)
                     s += W_DEVICE * res.get("device", 0) / n
                     s += W_HOST * res.get("host", 0) / n
+                    s += W_CKPT * res.get("checkpoint", 0) / n
                     s += W_LOCAL * sum(res.values()) / n
             elif getattr(du, "pilot_data_service", None) is None:
                 shared_dus.append(du)
             # else: replica-managed DU on a pilot outside the data
             # service — it holds nothing, so no locality credit
         s += W_DEVICE * self._device_tier_hits(pilot, shared_dus)
-        s += W_HOST * sum(du.resident_fraction("host") for du in shared_dus)
+        for du in shared_dus:
+            n = du.num_partitions
+            if n:
+                res = du.residency()    # one scan for both colder terms
+                s += W_HOST * res.get("host", 0) / n
+                s += W_CKPT * res.get("checkpoint", 0) / n
         if cu_desc.affinity and cu_desc.affinity == pilot.desc.affinity:
             s += W_AFFINITY
         s -= W_QUEUE * pilot.utilization

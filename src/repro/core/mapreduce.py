@@ -45,6 +45,7 @@ across two device budgets instead of thrashing one.
 from __future__ import annotations
 
 import functools
+import itertools
 import math
 import time
 
@@ -106,12 +107,20 @@ class _AdaptiveDepth:
 
 def _depth_controller(du: DataUnit, prefetch_depth: Optional[int],
                       indices: Sequence[int],
-                      tier_manager=None) -> Union[int, "_AdaptiveDepth"]:
+                      tier_manager=None,
+                      target_tier: str = "host"
+                      ) -> Union[int, "_AdaptiveDepth"]:
     """An explicit depth passes through; None builds the adaptive
-    controller, seeded from the restage cost of the group's first
-    partition in the manager the reads actually go through — the group
+    controller, seeded from the stage-in cost of the group's leading
+    partitions in the manager the reads actually go through — the group
     pilot's own TierManager on the replica path, else the DU's home
-    manager (0 => purely observation-driven)."""
+    manager (0 => purely observation-driven).
+
+    The seed is the WORST promote_cost over the first few partitions
+    toward `target_tier`, billed at each partition's *actual* tier, so a
+    group whose leading partitions were spilled to the slow checkpoint
+    tier seeds a deep pipeline (its restores are bandwidth-bound on the
+    persistent store) while an all-host group seeds a shallow one."""
     if prefetch_depth is not None:
         return max(1, int(prefetch_depth))
     seed = 0.0
@@ -119,11 +128,15 @@ def _depth_controller(du: DataUnit, prefetch_depth: Optional[int],
         for tm in (tier_manager, du.tier_manager):
             if tm is None:
                 continue
-            try:
-                seed = tm.restage_cost(du._key(indices[0]))
+            costs = []
+            for i in indices[:4]:
+                try:
+                    costs.append(tm.promote_cost(du._key(i), target_tier))
+                except KeyError:
+                    continue
+            if costs:
+                seed = max(costs)
                 break
-            except KeyError:
-                continue
     return _AdaptiveDepth(seed_stage=seed)
 
 
@@ -133,13 +146,22 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
                extra_args: tuple = (),
                jit_map: bool = True,
                prefetch_depth: Optional[int] = None,
-               pipeline: bool = True) -> Any:
+               pipeline: bool = True,
+               retries: int = 1) -> Any:
     """map_fn(partition, *extra_args) -> value; reduce_fn(a, b) -> value.
 
     reduce_fn must be associative+commutative (combine order is not fixed:
     the pipelined engine folds left per worker and reduces partials across
     workers; the legacy path tree-reduces).  prefetch_depth=None sizes the
     pipeline adaptively from measured stage/compute times; an int fixes it.
+
+    retries (managed pipelined path): when a group's Compute-Unit fails —
+    typically its pilot died mid-run — the group's partitions are re-bound
+    onto the surviving pilots and re-run, up to `retries` times.  The new
+    pilots' reads pull the partitions back through the PilotDataService
+    fetch path, whose last resort is the durable checkpoint home, so a
+    pilot failure costs a lazy restore instead of the whole job (0
+    disables; partial results from healthy groups are never recomputed).
     """
     if du.tier == "device":
         return _map_reduce_device(du, map_fn, reduce_fn, pilot, extra_args,
@@ -170,34 +192,78 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
         # to the driver (cuts reduce-phase data motion)
         prebind = (prefetch_depth if isinstance(prefetch_depth, int)
                    else _DEFAULT_PREBIND)
-        replica_groups = _replica_groups(du, manager)
-        cus = []
-        if replica_groups is not None:
-            # distributed Pilot-Data: each group is bound to the pilot
+        group_no = itertools.count()
+
+        def _submit_replica(gi, grp_pilot, idxs):
+            # distributed Pilot-Data: the group is bound to the pilot
             # holding its replicas and reads through THAT pilot's tiers
-            for gi, (grp_pilot, idxs) in enumerate(replica_groups):
-                def _fold(idxs=idxs, p=grp_pilot):
-                    comp = (lambda i:
-                            mfn(du.partition_device(i, pilot=p), *extra_args))
-                    return _pipeline_fold(
-                        du, idxs, comp, reduce_fn,
-                        _depth_controller(du, prefetch_depth, idxs,
-                                          tier_manager=p.tier_manager),
-                        "device", pilot=p)
-                cus.append(manager.submit(ComputeUnitDescription(
-                    fn=_fold, input_data=(du,), affinity=du.affinity,
-                    prefetch_parts=tuple(idxs[:prebind]),
-                    name=f"{du.name}-mapg{gi:03d}"), pilot=grp_pilot))
-        else:
-            for gi, idxs in enumerate(_partition_groups(du, manager)):
-                cus.append(manager.submit(ComputeUnitDescription(
-                    fn=lambda idxs=idxs: _pipeline_fold(
-                        du, idxs, compute, reduce_fn,
-                        _depth_controller(du, prefetch_depth, idxs), "host"),
-                    input_data=(du,), affinity=du.affinity,
-                    prefetch_parts=tuple(idxs[:prebind]),
-                    name=f"{du.name}-mapg{gi:03d}")))
-        return functools.reduce(reduce_fn, [cu.result() for cu in cus])
+            def _fold(idxs=idxs, p=grp_pilot):
+                comp = (lambda i:
+                        mfn(du.partition_device(i, pilot=p), *extra_args))
+                return _pipeline_fold(
+                    du, idxs, comp, reduce_fn,
+                    _depth_controller(du, prefetch_depth, idxs,
+                                      tier_manager=p.tier_manager,
+                                      target_tier="device"),
+                    "device", pilot=p)
+            return manager.submit(ComputeUnitDescription(
+                fn=_fold, input_data=(du,), affinity=du.affinity,
+                prefetch_parts=tuple(idxs[:prebind]),
+                name=f"{du.name}-mapg{gi:03d}"), pilot=grp_pilot)
+
+        def _submit_home(gi, idxs, exclude):
+            return manager.submit(ComputeUnitDescription(
+                fn=lambda idxs=idxs: _pipeline_fold(
+                    du, idxs, compute, reduce_fn,
+                    _depth_controller(du, prefetch_depth, idxs), "host"),
+                input_data=(du,), affinity=du.affinity,
+                prefetch_parts=tuple(idxs[:prebind]),
+                name=f"{du.name}-mapg{gi:03d}"), exclude=exclude)
+
+        def _submit_groups(indices, exclude):
+            """One (cu, idxs) job per group over the CURRENTLY healthy
+            pilots (minus `exclude`), replica-aware when possible."""
+            groups = _replica_groups(du, manager, indices=indices,
+                                     exclude=exclude)
+            if groups is not None:
+                return [(_submit_replica(next(group_no), p, idxs), idxs)
+                        for p, idxs in groups]
+            return [(_submit_home(next(group_no), idxs, exclude), idxs)
+                    for idxs in _partition_groups(du, manager,
+                                                  indices=indices)]
+
+        jobs = _submit_groups(None, frozenset())
+        partials: List[Any] = []
+        last_error: Optional[BaseException] = None
+        attempts = max(0, int(retries))
+        for attempt in range(attempts + 1):
+            failed_idxs: List[int] = []
+            failed_pilots: set = set()
+            for cu, idxs in jobs:
+                try:
+                    partials.append(cu.result())
+                except Exception as e:  # noqa: BLE001 - retried below
+                    last_error = e
+                    failed_idxs.extend(idxs)
+                    if cu.pilot_id:
+                        failed_pilots.add(cu.pilot_id)
+            if not failed_idxs:
+                break
+            if attempt == attempts:
+                raise last_error
+            # recovery path: re-bind only the failed partitions onto the
+            # surviving pilots; their reads pull the data back through the
+            # PilotDataService fetch chain (live replicas, then the
+            # durable checkpoint home), so a mid-run pilot death costs a
+            # lazy restore, not the job
+            healthy = {p.id for p in manager.service.healthy_pilots()}
+            if not healthy:
+                raise last_error
+            exclude = (frozenset(failed_pilots) if healthy - failed_pilots
+                       else frozenset())    # all failed: reset, like
+            #                                 result_with_retry
+            jobs = _submit_groups(sorted(failed_idxs), exclude)
+        return functools.reduce(reduce_fn, partials)
 
     cus = []
 
@@ -255,17 +321,23 @@ def _pipeline_fold(du: DataUnit, indices, compute: Callable,
     return acc
 
 
-def _partition_groups(du: DataUnit,
-                      manager: ComputeDataManager) -> List[List[int]]:
-    """Contiguous partition slices, one per healthy pilot (>=1)."""
+def _partition_groups(du: DataUnit, manager: ComputeDataManager,
+                      indices: Optional[Sequence[int]] = None
+                      ) -> List[List[int]]:
+    """Contiguous partition slices, one per healthy pilot (>=1); `indices`
+    restricts the split to a subset (the retry path's failed residue)."""
+    idx = (list(range(du.num_partitions)) if indices is None
+           else list(indices))
     n_workers = max(1, len(manager.service.healthy_pilots()))
-    n_groups = max(1, min(du.num_partitions, n_workers))
-    bounds = np.linspace(0, du.num_partitions, n_groups + 1).astype(int)
-    return [list(range(bounds[g], bounds[g + 1]))
+    n_groups = max(1, min(len(idx), n_workers))
+    bounds = np.linspace(0, len(idx), n_groups + 1).astype(int)
+    return [idx[bounds[g]:bounds[g + 1]]
             for g in range(n_groups) if bounds[g] < bounds[g + 1]]
 
 
-def _replica_groups(du: DataUnit, manager: ComputeDataManager
+def _replica_groups(du: DataUnit, manager: ComputeDataManager,
+                    indices: Optional[Sequence[int]] = None,
+                    exclude: frozenset = frozenset()
                     ) -> Optional[List[Tuple[PilotCompute, List[int]]]]:
     """Replica-aware partition->pilot assignment, or None when the DU is
     not bound to a PilotDataService (or no healthy pilot participates in
@@ -274,20 +346,23 @@ def _replica_groups(du: DataUnit, manager: ComputeDataManager
     Each partition sticks to the pilot already holding its replica at the
     hottest tier (so iterated scans keep hitting warm per-pilot memory);
     partitions no pilot holds go to the least-loaded pilots, keeping the
-    split balanced and deterministic.
+    split balanced and deterministic.  `indices` restricts the assignment
+    to a subset and `exclude` removes pilots (both used by the failure
+    retry, which re-binds only the failed residue onto survivors).
     """
     pds = getattr(du, "pilot_data_service", None)
     if pds is None:
         return None
     pilots = [p for p in manager.service.healthy_pilots()
-              if getattr(p, "tier_manager", None) is not None
+              if p.id not in exclude
+              and getattr(p, "tier_manager", None) is not None
               and pds.knows(p.id)]
     if not pilots:
         return None
     by_id = {p.id: p for p in pilots}
     assign: dict = {p.id: [] for p in pilots}
     unheld: List[int] = []
-    for i in range(du.num_partitions):
+    for i in (range(du.num_partitions) if indices is None else indices):
         best = pds.best_pilot(du._key(i), list(assign))
         if best is not None:
             assign[best].append(i)
@@ -326,7 +401,9 @@ def _map_reduce_device(du: DataUnit, map_fn, reduce_fn, pilot, extra_args,
         return _pipeline_fold(
             du, idxs,
             lambda i: jitted(du.partition_device(i), *extra_args),
-            reduce_fn, _depth_controller(du, prefetch_depth, idxs), "device")
+            reduce_fn,
+            _depth_controller(du, prefetch_depth, idxs,
+                              target_tier="device"), "device")
     vals: List[Any] = []
     for i in range(du.num_partitions):
         # under a budgeted device tier some partitions sit one level colder;

@@ -4,10 +4,21 @@ Paper mapping (§3.1/§3.3): the paper's pluggable Pilot-Data backends
 (local disk / Lustre / HDFS / Redis / Spark-RDD) become storage *tiers* of a
 TPU system:
 
-  file    — mmap'd .npy on disk            (paper: file backend, Lustre/HDFS)
+  checkpoint — durable manifest-backed store (paper: Lustre/HDFS, the
+               persistent anchor beneath the retained in-memory resources)
+  file    — mmap'd .npy on disk            (paper: file backend, node-local)
   object  — file + simulated WAN latency   (paper: cloud object store, S3)
   host    — process-resident numpy         (paper: Redis in-memory store)
   device  — jax.Arrays resident in HBM     (paper: Spark executor memory)
+
+The checkpoint tier is the only DURABLE one: its contents survive pilot
+loss (`TierManager.lose_volatile`) and process restarts (an fsync'd JSON
+manifest makes a reopened store self-describing).  Writes are asynchronous
+(the repro.checkpoint.CheckpointManager write-behind pattern): `put`
+buffers and returns, a writer thread lands bytes atomically
+(tmp + rename), and reads of a still-pending key are served from the
+buffer, so demotion into the slow tier never stalls the stager.  `flush`
+drains the writer and fsyncs the manifest deterministically.
 
 Backends expose a bandwidth/latency profile so benchmarks can reproduce the
 paper's Stampede-disk vs Gordon-flash comparison (Fig. 7/8) on one box: the
@@ -17,7 +28,9 @@ labeled as simulations in benchmark output.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import queue
 import shutil
 import threading
 import time
@@ -27,7 +40,11 @@ from typing import Dict, Iterable, List, Optional
 import jax
 import numpy as np
 
-TIERS = ("file", "object", "host", "device")
+TIERS = ("checkpoint", "file", "object", "host", "device")
+
+# tiers whose contents survive pilot loss (TierManager.lose_volatile) —
+# everything else dies with the node that held it
+DURABLE_TIERS = ("checkpoint",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +79,8 @@ PROFILES: Dict[str, TierProfile] = {
 # unthrottled; cost-aware eviction (GDSF) uses these so restage costs stay
 # ordered (file < object << host << device) even without simulated profiles.
 DEFAULT_TIER_BANDWIDTH: Dict[str, float] = {
-    "file": 200e6, "object": 80e6, "host": 10e9, "device": 60e9,
+    "checkpoint": 120e6, "file": 200e6, "object": 80e6, "host": 10e9,
+    "device": 60e9,
 }
 
 
@@ -128,6 +146,254 @@ class ObjectStoreBackend(FileBackend):
     def __init__(self, root: str | Path,
                  profile: TierProfile = PROFILES["object_store"]):
         super().__init__(root, profile)
+
+
+class CheckpointBackend(StorageBackend):
+    """Durable coldest tier: atomic .npy files + an fsync'd JSON manifest.
+
+    Write-behind: `put` buffers the value and enqueues it for a single
+    writer thread (the CheckpointManager async-save pattern), which lands
+    each partition atomically (write to a .tmp sibling, `os.replace`) and
+    batches manifest rewrites.  Reads of a still-pending key are served
+    from the buffer, so the copy-first/delete-last move protocol stays
+    hole-free while bytes drain to disk.  `flush()` waits for every queued
+    write to land and fsyncs the manifest; `close()` flushes and joins the
+    writer.  A fresh CheckpointBackend over an existing root loads the
+    manifest, so a reopened store is self-describing (keys, sizes) without
+    touching the data files.
+
+    One instance may safely back several TierManagers (the multi-pilot
+    shared home): all metadata is lock-guarded and file writes are atomic,
+    so two pilots demoting the same replica key write identical bytes.
+    """
+    tier = "checkpoint"
+
+    _MANIFEST = "MANIFEST.json"
+
+    def __init__(self, root: str | Path,
+                 profile: TierProfile = PROFILES["native"],
+                 max_pending_bytes: int = 128 * 2 ** 20):
+        super().__init__(profile)
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.max_pending_bytes = int(max_pending_bytes)
+        self._lock = threading.RLock()
+        self._space = threading.Condition(self._lock)
+        self._manifest: Dict[str, dict] = {}     # key -> {file, nbytes, ...}
+        self._pending: Dict[str, np.ndarray] = {}  # buffered, not yet on disk
+        self._pending_bytes = 0
+        self._queue: "queue.Queue[Optional[str]]" = queue.Queue()
+        self._writer: Optional[threading.Thread] = None
+        self._closed = False
+        self._manifest_dirty = False
+        self.counters: Dict[str, int] = {
+            "writes": 0, "reads": 0, "manifest_flushes": 0}
+        mpath = self.root / self._MANIFEST
+        if mpath.exists():
+            try:
+                self._manifest = json.loads(mpath.read_text()).get("keys", {})
+            except (OSError, ValueError):
+                self._manifest = {}
+
+    # -- paths / manifest ----------------------------------------------
+    def _path(self, name: str) -> Path:
+        return self.root / f"{name}.npy"
+
+    def _write_manifest_locked(self, fsync: bool = False) -> None:
+        doc = {"schema": "repro-checkpoint-tier.v1", "keys": self._manifest}
+        tmp = self.root / (self._MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
+            f.write(json.dumps(doc, sort_keys=True))
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(tmp, self.root / self._MANIFEST)
+        if fsync:
+            dirfd = os.open(self.root, os.O_RDONLY)
+            try:
+                os.fsync(dirfd)
+            finally:
+                os.close(dirfd)
+        self._manifest_dirty = False
+        self.counters["manifest_flushes"] += 1
+
+    # -- async writer ---------------------------------------------------
+    def _ensure_writer_locked(self) -> None:
+        if self._writer is None or not self._writer.is_alive():
+            self._writer = threading.Thread(
+                target=self._writer_loop, daemon=True,
+                name="checkpoint-writer")
+            self._writer.start()
+
+    def _writer_loop(self) -> None:
+        while True:
+            key = self._queue.get()
+            if key is None:
+                self._queue.task_done()
+                return
+            try:
+                self._land(key)
+            finally:
+                self._queue.task_done()
+
+    def _land(self, key: str) -> None:
+        """Write one pending key to disk atomically; skip if it was deleted
+        (or re-put) while queued."""
+        with self._lock:
+            arr = self._pending.get(key)
+        if arr is None:
+            return
+        self.profile.charge(int(arr.nbytes), write=True)
+        path = self._path(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.parent / (path.name + ".tmp")
+        with open(tmp, "wb") as f:     # file object: np.save must not
+            np.save(f, arr)            # append .npy to the tmp name
+        with self._lock:
+            if self._pending.get(key) is not arr:
+                tmp.unlink(missing_ok=True)   # deleted/replaced mid-write
+                return
+            os.replace(tmp, path)
+            del self._pending[key]
+            self._pending_bytes -= int(arr.nbytes)
+            self._space.notify_all()
+            self._manifest[key] = {
+                "file": path.name, "nbytes": int(arr.nbytes),
+                "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            self._manifest_dirty = True
+            self.counters["writes"] += 1
+            # batch manifest rewrites: only when the queue has drained
+            if self._queue.unfinished_tasks <= 1:
+                self._write_manifest_locked()
+
+    # -- StorageBackend surface ----------------------------------------
+    def put(self, name: str, value: np.ndarray) -> None:
+        arr = np.asarray(value)
+        with self._space:
+            if self._closed:
+                # post-close stores write synchronously (durability over
+                # latency once the writer is gone)
+                self._pending[name] = arr
+                self._land(name)
+                self._write_manifest_locked(fsync=True)
+                return
+            # backpressure: the write-behind buffer is byte-bounded, so a
+            # spill under memory pressure actually frees RAM instead of
+            # parking the whole overflow in _pending while the (possibly
+            # throttled) writer drains; an oversized single value is
+            # admitted once the buffer is empty
+            while (self._pending_bytes
+                   and self._pending_bytes + int(arr.nbytes)
+                   > self.max_pending_bytes):
+                self._space.wait(1.0)
+            old = self._pending.get(name)
+            if old is not None:
+                self._pending_bytes -= int(old.nbytes)
+            self._pending[name] = arr
+            self._pending_bytes += int(arr.nbytes)
+            self._ensure_writer_locked()
+            self._queue.put(name)
+
+    def get(self, name: str) -> np.ndarray:
+        with self._lock:
+            arr = self._pending.get(name)
+            if arr is None and name not in self._manifest:
+                raise KeyError(name)
+        if arr is not None:
+            return arr          # buffered write: a plain memory read
+        arr = np.load(self._path(name), mmap_mode=None)
+        self.profile.charge(int(arr.nbytes), write=False)
+        with self._lock:
+            self.counters["reads"] += 1
+        return arr
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            dropped = self._pending.pop(name, None)
+            if dropped is not None:
+                self._pending_bytes -= int(dropped.nbytes)
+                self._space.notify_all()
+            had = self._manifest.pop(name, None)
+            self._path(name).unlink(missing_ok=True)
+            if had is not None:
+                self._manifest_dirty = True
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            return name in self._pending or name in self._manifest
+
+    def nbytes(self, name: str) -> int:
+        with self._lock:
+            arr = self._pending.get(name)
+            if arr is not None:
+                return int(arr.nbytes)
+            info = self._manifest.get(name)
+            if info is not None:
+                return int(info["nbytes"])
+        raise KeyError(name)
+
+    def keys(self) -> List[str]:
+        """Every key the store holds (pending or landed) — the reopen
+        surface: a fresh manager can adopt these."""
+        with self._lock:
+            return sorted(set(self._pending) | set(self._manifest))
+
+    # -- durability -----------------------------------------------------
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Deterministic write barrier: every buffered put is on disk and
+        the manifest is fsync'd when this returns.  On a store shared
+        across managers this waits for EVERY holder's queued writes (it
+        is one directory and one manifest); `timeout` bounds the wait and
+        raises TimeoutError with writes still in flight."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        with self._queue.all_tasks_done:
+            while self._queue.unfinished_tasks:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        "checkpoint flush timed out with writes in flight")
+                self._queue.all_tasks_done.wait(remaining)
+        with self._lock:
+            self._write_manifest_locked(fsync=True)
+
+    def close(self) -> None:
+        """Flush, then stop and join the writer thread (idempotent; reads
+        and synchronous writes keep working afterwards)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            writer = self._writer
+        self._queue.join()
+        if writer is not None and writer.is_alive():
+            self._queue.put(None)
+            writer.join(timeout=30)
+        with self._lock:
+            self._write_manifest_locked(fsync=True)
+
+
+# shared checkpoint stores: pilots naming the same checkpoint_dir must hit
+# the SAME instance (one manifest writer per directory), which is also what
+# makes the store a shared home the PilotDataService can recover from
+_CHECKPOINT_STORES: Dict[str, CheckpointBackend] = {}
+_CHECKPOINT_STORES_LOCK = threading.Lock()
+
+
+def checkpoint_store(root: str | Path,
+                     profile: TierProfile = PROFILES["native"]
+                     ) -> CheckpointBackend:
+    """The CheckpointBackend for `root`, shared per resolved directory.
+    A closed cached instance is replaced by a fresh one that reloads the
+    manifest (the reopen path)."""
+    key = str(Path(root).resolve())
+    with _CHECKPOINT_STORES_LOCK:
+        be = _CHECKPOINT_STORES.get(key)
+        if be is None or be._closed:
+            be = CheckpointBackend(root, profile)
+            _CHECKPOINT_STORES[key] = be
+        return be
 
 
 class HostMemoryBackend(StorageBackend):
@@ -222,6 +488,8 @@ class DeviceBackend(StorageBackend):
 def make_backend(tier: str, *, root: Optional[str] = None,
                  profile: TierProfile = PROFILES["native"],
                  mesh=None, pspec=None) -> StorageBackend:
+    if tier == "checkpoint":
+        return checkpoint_store(root or ".pilot_checkpoint", profile)
     if tier == "file":
         return FileBackend(root or ".pilot_data", profile)
     if tier == "object":

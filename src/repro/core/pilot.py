@@ -47,6 +47,11 @@ class PilotComputeDescription:
     #                                  pilot TierManager's device-tier budget
     host_memory_gb: float = 0.0      # optional host-tier budget for the
     #                                  pilot's TierManager (0 = unbounded)
+    checkpoint_dir: str = ""         # durable checkpoint tier beneath the
+    #                                  volatile budgets; pilots naming the
+    #                                  same dir share ONE persistent store
+    #                                  (the recovery home after pilot loss)
+    checkpoint_gb: float = 0.0       # optional checkpoint budget (0 = inf)
     eviction_policy: str = "lru"     # "lru" | "gdsf" for the pilot's tiers
     hysteresis: int = 0              # eviction ping-pong damping (clock ticks)
     stager_workers: int = 2          # TierManager stager pool width (the

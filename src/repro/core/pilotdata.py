@@ -25,6 +25,23 @@ Capacity stays per-pilot: a replica landing in a full pilot demotes that
 pilot's own data through *its* hierarchy (device -> host -> file), or is
 refused outright when it cannot fit anywhere in the pilot — replication
 never silently expands a pilot's memory ask.
+
+Checkpoint home (`checkpoint_dir=` / `attach_checkpoint_store`): the
+service can own a durable checkpoint store that acts as a **shared home**
+beneath every pilot:
+
+  * `persist(du)` writes a DU's partitions through to the store (async
+    via the store's write-behind writer; `flush()` is the barrier), and
+    `register(du, persist=True)` does it at registration;
+  * the replica fetch path falls back to the checkpoint store when the
+    home placement and every live replica are gone — so a CU retried
+    after a pilot failure (volatile tiers wiped) restores its partitions
+    from checkpoint instead of erroring.  Recovery is lazy: bytes come
+    back one partition at a time, as reads pull them through;
+  * writes stay coherent: `update_partition` refreshes the persisted
+    copy alongside the replica invalidation, and `DataUnit.delete` drops
+    it (`drop_persistent=True`), so the store never resurrects deleted
+    or stale data.
 """
 from __future__ import annotations
 
@@ -34,7 +51,8 @@ from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
-from repro.core.memory import TIERS
+from repro.core.memory import TIERS, StorageBackend
+from repro.core.memory import checkpoint_store as _checkpoint_store
 from repro.core.tiering import CapacityError, TierManager
 
 _N_STRIPES = 32
@@ -49,7 +67,8 @@ class PilotDataService:
     coherence flow through this service.
     """
 
-    def __init__(self, max_workers: int = 4):
+    def __init__(self, max_workers: int = 4,
+                 checkpoint_dir: Optional[str] = None):
         self._managers: Dict[str, TierManager] = {}   # pilot id -> manager
         self._replicas: Dict[str, Set[str]] = {}      # key -> pilot ids
         self._lock = threading.Lock()                 # registry metadata
@@ -61,7 +80,22 @@ class PilotDataService:
         self.events: List[dict] = []
         self.counters: Dict[str, int] = {
             "replications": 0, "pulls": 0, "invalidations": 0,
-            "replicate_refused": 0}
+            "replicate_refused": 0, "checkpoint_restores": 0, "persists": 0}
+        # the shared durable home (see module docstring); per-directory
+        # shared instance, so pilots spilling to the same dir and this
+        # service recover from ONE consistent store.  The service never
+        # closes it — pilots naming the same dir hold the same instance,
+        # and a second live instance over one directory would clobber the
+        # manifest — it only flushes (the durability barrier).
+        self.checkpoint_store: Optional[StorageBackend] = (
+            _checkpoint_store(checkpoint_dir) if checkpoint_dir else None)
+
+    def attach_checkpoint_store(self, store: StorageBackend
+                                ) -> "PilotDataService":
+        """Use an existing (possibly shared) checkpoint store as the
+        durable home; the caller keeps ownership of its lifecycle."""
+        self.checkpoint_store = store
+        return self
 
     # -- membership ------------------------------------------------------
     def register_pilot(self, pilot) -> "PilotDataService":
@@ -83,9 +117,48 @@ class PilotDataService:
             for pids in self._replicas.values():
                 pids.discard(pilot_id)
 
-    def register(self, du) -> "DataUnit":  # noqa: F821 - forward ref
+    def register(self, du, persist: bool = False):  # noqa: F821 - fwd ref
         du.pilot_data_service = self
+        if persist:
+            self.persist(du)
         return du
+
+    # -- durable home ----------------------------------------------------
+    def persist(self, du, parts: Optional[Sequence[int]] = None,
+                flush: bool = False) -> List[int]:
+        """Write partitions of `du` through to the checkpoint store (the
+        durable home replica all pilots can recover from).  Writes ride
+        the store's async writer; pass flush=True (or call
+        `flush_checkpoints`) for the durability barrier.  Returns the
+        partition indices persisted (missing ones are skipped)."""
+        store = self.checkpoint_store
+        if store is None:
+            raise RuntimeError("no checkpoint store attached: construct "
+                               "PilotDataService(checkpoint_dir=...) or "
+                               "attach_checkpoint_store first")
+        done: List[int] = []
+        for i in (range(du.num_partitions) if parts is None else parts):
+            try:
+                val = du.partition(i)
+            except (KeyError, FileNotFoundError):
+                continue
+            store.put(du._key(i), np.asarray(val))
+            done.append(i)
+        with self._lock:
+            self.counters["persists"] += len(done)
+        if done:
+            self.events.append({"op": "persist", "du": du.name,
+                                "parts": len(done)})
+        if flush:
+            self.flush_checkpoints()
+        return done
+
+    def flush_checkpoints(self) -> None:
+        """Durability barrier: every persisted byte on disk, manifest
+        fsync'd (no-op without a store)."""
+        store = self.checkpoint_store
+        if store is not None and hasattr(store, "flush"):
+            store.flush()
 
     def knows(self, pilot_id: str) -> bool:
         return pilot_id in self._managers
@@ -256,9 +329,15 @@ class PilotDataService:
             self.replicate(du, i, pilot_id, pull_tier)
             return tm.get_device(key) if device else tm.get(key)
         except CapacityError:
+            # too large to cache in the pilot: serve without caching, via
+            # the full fetch chain (home, live replicas, checkpoint home)
             with self._lock:
                 self.counters["pulls"] += 1
-            return du.partition_device(i) if device else du.partition(i)
+            val = self._fetch(du, i)
+            if device:
+                import jax
+                return jax.device_put(np.asarray(val))
+            return np.asarray(val)
         except (KeyError, FileNotFoundError):
             # deleted while pulling: the home read gives the truth (and
             # raises KeyError if the partition is truly gone)
@@ -266,7 +345,9 @@ class PilotDataService:
 
     def _fetch(self, du, i: int, exclude: Optional[str] = None):
         """Source a partition's bytes: home placement first, then any other
-        replica holder (survives a released home tier)."""
+        replica holder, then the durable checkpoint home (survives a
+        released home tier AND pilot loss — this is the recovery path a
+        retried CU restores through)."""
         key = du._key(i)
         try:
             return du.partition(i)
@@ -282,20 +363,43 @@ class PilotDataService:
                 return tm.get(key)
             except (KeyError, FileNotFoundError):
                 continue
+        store = self.checkpoint_store
+        if store is not None:
+            try:
+                val = store.get(key)
+            except (KeyError, FileNotFoundError):
+                val = None
+            if val is not None:
+                with self._lock:
+                    self.counters["checkpoint_restores"] += 1
+                self.events.append({"op": "checkpoint-restore", "key": key})
+                return val
         raise KeyError(key)
 
     # -- coherence -------------------------------------------------------
     def invalidate(self, du, i: Optional[int] = None,
-                   keep: Optional[str] = None) -> int:
+                   keep: Optional[str] = None,
+                   drop_persistent: bool = False) -> int:
         """Drop pilot replicas of partition `i` (or of every partition) —
         the write/delete coherence path.  `keep` preserves one pilot's
         replica (used when that pilot just produced the new value).
-        Returns the number of replicas removed."""
+
+        The durable home stays coherent too: on a write
+        (drop_persistent=False) a persisted copy is refreshed from the
+        new home bytes, so recovery never restores a stale value; on a
+        delete (drop_persistent=True) the persisted copy is removed, so
+        the store cannot resurrect deleted data.  Returns the number of
+        replicas removed."""
         idxs = range(du.num_partitions) if i is None else (i,)
+        store = self.checkpoint_store
         removed = 0
         for j in idxs:
             key = du._key(j)
             with self._stripe(key):
+                # snapshot BEFORE dropping replicas: a replica manager's
+                # delete also purges its untracked durable copies, which
+                # may live in this very store when the pilots spill to it
+                persisted = store is not None and store.exists(key)
                 with self._lock:
                     pids = self._replicas.pop(key, set())
                     if keep is not None and keep in pids:
@@ -308,6 +412,14 @@ class PilotDataService:
                     if tm is not None:
                         tm.delete(key)
                         dropped += 1
+                if persisted:
+                    if drop_persistent:
+                        store.delete(key)
+                    else:
+                        try:
+                            store.put(key, np.asarray(du.partition(j)))
+                        except (KeyError, FileNotFoundError):
+                            store.delete(key)   # home gone: don't go stale
                 if dropped:
                     self.events.append({"op": "invalidate", "key": key,
                                         "replicas": dropped})
@@ -334,7 +446,13 @@ class PilotDataService:
                     pass
 
     def close(self) -> None:
-        """Stop the replicator pool (idempotent; registry stays readable)."""
+        """Stop the replicator pool and flush the checkpoint store so
+        every persisted byte is durable and the manifest is fsync'd.  The
+        store itself stays open (it is shared per directory with the
+        pilots' spill tiers; its writer thread is a daemon) — closing it
+        here while another holder still wrote to it would fork two live
+        manifests over one directory.  Idempotent; registry and store
+        stay readable."""
         with self._lock:
             if self._closed:
                 return
@@ -342,6 +460,7 @@ class PilotDataService:
         self._executor.shutdown(wait=True, cancel_futures=True)
         with self._lock:
             self._inflight.clear()
+        self.flush_checkpoints()
 
     def __repr__(self) -> str:
         with self._lock:

@@ -9,8 +9,14 @@ management the paper assigns to Pilot-Data:
 
   * per-tier capacity budgets (bytes) — HBM and host RAM are finite;
   * pluggable eviction that *demotes* a partition to the next-colder tier
-    (device -> host -> object/file) instead of dropping it, so data is
-    never lost to pressure.  Policies: plain LRU (default, recency only)
+    (device -> host -> object/file -> checkpoint) instead of dropping it,
+    so data is never lost to pressure.  With a checkpoint tier attached
+    (the durable manifest-backed store of repro.core.memory) the hierarchy
+    bottoms out on disk: pressure beyond the volatile budgets spills the
+    coldest partitions to persistent storage and reads restore them
+    lazily through the same copy-first/delete-last protocol, with heat
+    promotion pulling hot restorees back up.  Policies: plain LRU
+    (default, recency only)
     and GDSF (Greedy-Dual-Size-Frequency: priority = frequency x
     cost-of-restage / size, so a small hot partition outlives a large cold
     one even when the cold one was touched more recently);
@@ -59,7 +65,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.memory import DEFAULT_TIER_BANDWIDTH, StorageBackend, TIERS
+from repro.core.memory import (DEFAULT_TIER_BANDWIDTH, DURABLE_TIERS,
+                               StorageBackend, TIERS)
 
 
 class CapacityError(RuntimeError):
@@ -260,6 +267,7 @@ class TierManager:
         self._moving: set = set()      # keys with a copy in flight
         self._inflight: Dict[tuple, Future] = {}
         self._closed = False
+        self._lost = False             # node death: refuse new placements
         self._executor = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="tier-stager")
         self.events: List[dict] = []   # telemetry: evict/demote/promote/stage
@@ -321,14 +329,33 @@ class TierManager:
         with self._meta:
             return self._restage_cost_entry(self._entries[key])
 
+    def _transfer_cost(self, src: str, dst: str, nbytes: int) -> float:
+        """Seconds to read `nbytes` from `src` and write them into `dst`
+        (profile bandwidths, nominal per-tier defaults when unthrottled)."""
+        rp = self.backends[src].profile
+        read_bw = rp.read_bw or DEFAULT_TIER_BANDWIDTH.get(src, 1e9)
+        wp = self.backends[dst].profile if dst in self.backends else rp
+        write_bw = wp.write_bw or DEFAULT_TIER_BANDWIDTH.get(dst, 1e9)
+        return (rp.latency + nbytes / read_bw
+                + wp.latency + nbytes / write_bw)
+
     def _restage_cost_entry(self, e: _Entry) -> float:
         colder = self._colder(e.tier) or e.tier
-        rp = self.backends[colder].profile
-        read_bw = rp.read_bw or DEFAULT_TIER_BANDWIDTH.get(colder, 1e9)
-        wp = self.backends[e.tier].profile
-        write_bw = wp.write_bw or DEFAULT_TIER_BANDWIDTH.get(e.tier, 1e9)
-        return (rp.latency + e.nbytes / read_bw
-                + wp.latency + e.nbytes / write_bw)
+        return self._transfer_cost(colder, e.tier, e.nbytes)
+
+    def promote_cost(self, key: str, tier: str) -> float:
+        """Estimated seconds to stage `key` from where it currently resides
+        into `tier` — the lazy-restore cost a prefetch planner should
+        budget for.  Unlike `restage_cost` (the hypothetical cost of
+        bringing the key back after one more demotion), this bills the
+        bandwidth of the key's ACTUAL tier, so a checkpoint-resident
+        partition is priced at the persistent store's bandwidth, not the
+        host tier's."""
+        with self._meta:
+            e = self._entries[key]
+            if e.tier == tier:
+                return 0.0
+            return self._transfer_cost(e.tier, tier, e.nbytes)
 
     # -- internal helpers (meta lock held) ------------------------------
     def _hotter(self, tier: str) -> Optional[str]:
@@ -445,10 +472,22 @@ class TierManager:
             return
         charged = False
         try:
-            # reserve room in the colder tier (may recurse further down)
+            # reserve room in the colder tier (may recurse further down);
+            # a tier whose WHOLE budget is smaller than the victim is
+            # skipped over — the victim falls through toward the durable
+            # floor instead of wedging the demotion chain (a host tier
+            # sized below the partition must not block the spill to disk)
             while True:
                 with self._meta:
-                    if self._fits_locked(dst, nbytes):
+                    try:
+                        fits = self._fits_locked(dst, nbytes)
+                    except CapacityError:
+                        nxt = self._colder(dst)
+                        if nxt is None:
+                            raise
+                        dst = nxt
+                        continue
+                    if fits:
                         self._charge(dst, nbytes)
                         charged = True
                         break
@@ -500,6 +539,10 @@ class TierManager:
         """
         if tier not in self.backends:
             raise KeyError(f"no backend for tier {tier!r}")
+        if self._lost:
+            raise CapacityError(
+                "tier manager lost its node (lose_volatile); refusing "
+                "new placements")
         arr = value if hasattr(value, "nbytes") else np.asarray(value)
         nbytes = int(arr.nbytes)
         deadline = time.monotonic() + 30.0
@@ -543,11 +586,41 @@ class TierManager:
                 return
             self._usage[e.tier] -= e.nbytes
             self.backends[e.tier].delete(key)
+            # purge the untracked durable copies promotions leave behind,
+            # so a deleted key can never be resurrected from the store
+            for t in DURABLE_TIERS:
+                if t != e.tier and t in self.backends:
+                    self.backends[t].delete(key)
+
+    def lose_volatile(self) -> List[str]:
+        """Simulate node loss: drop every entry resident in a volatile
+        tier (everything but the durable checkpoint store) — metadata,
+        accounting, and backend bytes.  Checkpoint-resident entries
+        survive and stay readable; the keys lost are returned so callers
+        (fault harnesses, the PilotDataService) can account for them."""
+        lost: List[str] = []
+        with self._meta:
+            self._lost = True    # in-flight replications must not revive
+            #                      the dead node's tiers
+            self._apply_ledger_locked(allow_promote=False)
+            for key, e in list(self._entries.items()):
+                if e.tier in DURABLE_TIERS:
+                    continue
+                self._usage[e.tier] -= e.nbytes
+                self.backends[e.tier].delete(key)
+                del self._entries[key]
+                lost.append(key)
+            self.events.append({"op": "lose-volatile", "keys": len(lost)})
+        return lost
 
     def adopt(self, key: str, tier: str, nbytes: Optional[int] = None,
               pinned: bool = False) -> None:
         """Register data already sitting in a backend (e.g. a pre-existing
         DataUnit) so it participates in budgets/eviction/heat."""
+        if self._lost:
+            raise CapacityError(
+                "tier manager lost its node (lose_volatile); refusing "
+                "new placements")
         if nbytes is None:
             nbytes = self.backends[tier].nbytes(key)
         deadline = time.monotonic() + 30.0
@@ -651,7 +724,11 @@ class TierManager:
 
         With keep_source=True the source copy is left behind (untracked,
         cold-tier cache); residency metadata moves to the destination.
-        Returns the tier the key resides in afterwards.
+        Promotion out of a DURABLE tier always keeps the source copy —
+        staging a partition up from the checkpoint store must not delete
+        the only copy that survives node loss (data staged in from Lustre
+        is not removed from Lustre); a later demotion simply overwrites
+        it.  Returns the tier the key resides in afterwards.
 
         The copy itself runs *outside* the metadata lock (so staging
         overlaps concurrent reads/compute); the lock is taken only to
@@ -660,6 +737,10 @@ class TierManager:
         """
         if tier not in self.backends:
             raise KeyError(f"no backend for tier {tier!r}")
+        if self._lost and tier not in DURABLE_TIERS:
+            raise CapacityError(
+                "tier manager lost its node (lose_volatile); refusing "
+                "stages into volatile tiers")
         deadline = time.monotonic() + 30.0
         while True:
             evict = False
@@ -707,7 +788,7 @@ class TierManager:
             e.tier = tier
             self._touch(e)
             self._usage[src] -= nbytes
-            if not keep_source:
+            if not keep_source and src not in DURABLE_TIERS:
                 self.backends[src].delete(key)
             self._moving.discard(key)
             hot = self.order.index(tier) > self.order.index(src)
@@ -783,7 +864,12 @@ class TierManager:
         """Deterministic shutdown: refuse new stages, cancel queued moves,
         wait for in-flight ones to land, and join the stager threads, so
         no tier-stager thread or half-applied move outlives the manager.
-        Idempotent; reads keep working afterwards."""
+        Backends with a durability barrier (the checkpoint tier's `flush`)
+        are flushed LAST — after every stager-driven demotion has landed —
+        so all in-flight checkpoint writes are on disk and the manifest is
+        fsync'd: a store reopened after close() is exactly consistent with
+        this manager's final residency.  Idempotent; reads keep working
+        afterwards."""
         with self._meta:
             if self._closed:
                 return
@@ -795,6 +881,10 @@ class TierManager:
         with self._meta:
             self._inflight.clear()
             self._apply_ledger_locked(allow_promote=False)
+        for be in self.backends.values():
+            flush = getattr(be, "flush", None)
+            if flush is not None:
+                flush()     # write barrier + fsync'd manifest
 
     def __repr__(self) -> str:
         parts = ", ".join(
@@ -809,14 +899,23 @@ def make_tier_manager(*, device_budget: Optional[int] = None,
                       promote_threshold: int = 4,
                       policy: Union[str, EvictionPolicy] = "lru",
                       hysteresis: int = 0,
-                      max_workers: int = 2) -> TierManager:
+                      max_workers: int = 2,
+                      checkpoint_root: Optional[str] = None,
+                      checkpoint_budget: Optional[int] = None) -> TierManager:
     """Convenience: a host(+file)(+device) hierarchy with common budgets.
 
-    Without `root` the coldest tier is host RAM (no disk side effects);
-    with `root` a file tier is added below it.
+    Without `root` the coldest volatile tier is host RAM (no disk side
+    effects); with `root` a file tier is added below it.  With
+    `checkpoint_root` a durable checkpoint tier is added at the very
+    bottom (shared per directory — several managers naming the same root
+    get the same store instance), so pressure demotions beyond the
+    volatile budgets spill to persistent storage instead of refusing.
     """
     from repro.core.memory import make_backend
     backends: Dict[str, StorageBackend] = {}
+    if checkpoint_root is not None:
+        backends["checkpoint"] = make_backend("checkpoint",
+                                              root=checkpoint_root)
     if root is not None:
         backends["file"] = make_backend("file", root=root)
     backends["host"] = make_backend("host")
@@ -826,6 +925,8 @@ def make_tier_manager(*, device_budget: Optional[int] = None,
         budgets["device"] = int(device_budget)
     if host_budget is not None:
         budgets["host"] = int(host_budget)
+    if checkpoint_budget is not None:
+        budgets["checkpoint"] = int(checkpoint_budget)
     return TierManager(backends, budgets, promote_threshold=promote_threshold,
                        policy=policy, hysteresis=hysteresis,
                        max_workers=max_workers)
@@ -839,12 +940,23 @@ def tier_manager_for_pilot(desc, mesh=None) -> Optional[TierManager]:
     `host_memory_gb` (optional) its host-tier budget: DUs placed — or
     replicated by the PilotDataService — into this manager are retained in
     the pilot's HBM share up to the ask and demoted through its own host
-    tier beyond it, making each pilot a separate locality domain."""
+    tier beyond it, making each pilot a separate locality domain.
+
+    `checkpoint_dir` adds the durable checkpoint tier beneath the volatile
+    budgets (`checkpoint_gb` optionally bounds it; 0 = unbounded): the
+    pilot spills its coldest partitions there under pressure instead of
+    refusing, restores lazily on read, and — because the store is shared
+    per directory — pilots naming the same dir form one persistent home
+    the PilotDataService can recover replicas from after a pilot dies."""
     if not getattr(desc, "memory_gb", 0):
         return None
+    ckpt_dir = getattr(desc, "checkpoint_dir", "") or None
+    ckpt_gb = getattr(desc, "checkpoint_gb", 0.0)
     return make_tier_manager(
         device_budget=int(desc.memory_gb * 2 ** 30),
         host_budget=(int(desc.host_memory_gb * 2 ** 30)
                      if desc.host_memory_gb else None),
         mesh=mesh, policy=desc.eviction_policy,
-        hysteresis=desc.hysteresis, max_workers=desc.stager_workers)
+        hysteresis=desc.hysteresis, max_workers=desc.stager_workers,
+        checkpoint_root=ckpt_dir,
+        checkpoint_budget=(int(ckpt_gb * 2 ** 30) if ckpt_gb else None))

@@ -1,0 +1,243 @@
+"""The durable checkpoint tier: spill-under-pressure instead of refusal,
+lazy restore with promotion, deterministic close (flush + fsync'd
+manifest), reopen consistency, per-pilot provisioning knobs, the shared
+store, and the 3x-over-budget acceptance workload."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CapacityError, CheckpointBackend, DataUnit,
+                        PilotComputeDescription, PilotComputeService,
+                        TierManager, checkpoint_store, kmeans, make_backend,
+                        make_blobs, make_tier_manager)
+
+KB = 1024
+
+
+def _arr(i, kb=1):
+    return np.full((kb * KB // 4,), i, dtype=np.float32)
+
+
+def _tm(tmp_path, device_budget=None, host_budget=None,
+        promote_threshold=0, **kw):
+    backends = {"checkpoint": make_backend("checkpoint",
+                                           root=tmp_path / "ckpt"),
+                "host": make_backend("host"),
+                "device": make_backend("device")}
+    return TierManager(backends,
+                       {"device": device_budget, "host": host_budget},
+                       promote_threshold=promote_threshold, **kw)
+
+
+# -- spill + lazy restore ------------------------------------------------
+def test_host_pressure_spills_to_checkpoint_instead_of_refusing(tmp_path):
+    """Without the checkpoint tier a device+host hierarchy refuses once
+    both budgets fill; with it, the coldest partitions spill to disk."""
+    small = TierManager({"host": make_backend("host"),
+                         "device": make_backend("device")},
+                        {"device": 2 * KB, "host": 2 * KB},
+                        promote_threshold=0)
+    for i in range(4):
+        small.put(f"p{i}", _arr(i), "device")
+    with pytest.raises(CapacityError):
+        small.put("p4", _arr(4), "device")
+
+    tm = _tm(tmp_path, device_budget=2 * KB, host_budget=2 * KB)
+    for i in range(8):
+        tm.put(f"p{i}", _arr(i), "device")
+        assert tm.usage("device") <= 2 * KB
+        assert tm.usage("host") <= 2 * KB
+    # the overflow went to the durable floor, nothing was dropped
+    assert len(tm.resident_keys("checkpoint")) == 4
+    for i in range(8):
+        np.testing.assert_array_equal(tm.get(f"p{i}"), _arr(i))
+    tm.close()
+
+
+def test_lazy_restore_promotes_back_up_the_hierarchy(tmp_path):
+    tm = _tm(tmp_path, device_budget=2 * KB, promote_threshold=2)
+    for i in range(4):
+        tm.put(f"p{i}", _arr(i), "device")
+    spilled = tm.resident_keys("checkpoint") + tm.resident_keys("host")
+    assert spilled                       # pressure pushed something down
+    cold = spilled[0]
+    for _ in range(6):                   # heat re-earns promotion
+        np.testing.assert_array_equal(
+            tm.get(cold), _arr(int(cold[1:])))
+        tm.drain(timeout=10)
+    assert tm.tier_of(cold) == "device"
+    tm.close()
+
+
+def test_checkpoint_budget_is_enforced(tmp_path):
+    tm = TierManager({"checkpoint": make_backend("checkpoint",
+                                                 root=tmp_path / "ck"),
+                      "host": make_backend("host")},
+                     {"host": 1 * KB, "checkpoint": 2 * KB},
+                     promote_threshold=0)
+    tm.put("a", _arr(1), "host")
+    tm.put("b", _arr(2), "host")         # a -> checkpoint
+    tm.put("c", _arr(3), "host")         # b -> checkpoint
+    with pytest.raises(CapacityError):   # checkpoint full, coldest tier
+        tm.put("d", _arr(4), "host")
+    assert tm.usage("checkpoint") <= 2 * KB
+    tm.close()
+
+
+def test_promote_cost_bills_the_actual_tier(tmp_path):
+    """A checkpoint-resident partition must price its restore at the
+    persistent store's bandwidth, not the host tier's (the adaptive
+    prefetch planner's seed)."""
+    tm = _tm(tmp_path)
+    tm.put("x", _arr(1, kb=64), "host")
+    tm.stage("x", "checkpoint")
+    from_ckpt = tm.promote_cost("x", "device")
+    tm.stage("x", "host")
+    from_host = tm.promote_cost("x", "device")
+    assert from_ckpt > from_host
+    assert tm.promote_cost("x", "host") == 0.0
+    tm.close()
+
+
+# -- deterministic close + reopen ---------------------------------------
+def test_close_flushes_inflight_writes_and_fsyncs_manifest(tmp_path):
+    tm = _tm(tmp_path, device_budget=2 * KB, host_budget=2 * KB)
+    vals = {f"p{i}": _arr(i) for i in range(12)}
+    for k, v in vals.items():
+        tm.put(k, v, "device")           # spills ride the async writer
+    spilled = tm.resident_keys("checkpoint")
+    tm.close()
+    # after close every spilled partition is ON DISK with a manifest entry
+    manifest = json.loads((tmp_path / "ckpt" / "MANIFEST.json").read_text())
+    assert set(spilled) <= set(manifest["keys"])
+    for k in spilled:
+        assert (tmp_path / "ckpt" / f"{k}.npy").exists()
+    # no half-written temporaries survive the flush
+    assert not list((tmp_path / "ckpt").rglob("*.tmp"))
+    # a REOPENED store (fresh instance, manifest only) serves the bytes
+    be = CheckpointBackend(tmp_path / "ckpt")
+    assert set(be.keys()) == set(manifest["keys"])
+    for k in spilled:
+        np.testing.assert_array_equal(be.get(k), vals[k])
+
+
+def test_reopened_manager_adopts_checkpointed_partitions(tmp_path):
+    tm = _tm(tmp_path, host_budget=1 * KB)
+    for i in range(3):
+        tm.put(f"p{i}", _arr(i), "host")     # p0, p1 spill
+    tm.close()
+    # a NEW manager over the same directory sees a consistent store and
+    # can adopt what the old one spilled
+    tm2 = _tm(tmp_path)
+    store = tm2.backends["checkpoint"]
+    for k in store.keys():
+        tm2.adopt(k, "checkpoint")
+        np.testing.assert_array_equal(tm2.get(k), _arr(int(k[1:])))
+    tm2.close()
+
+
+def test_close_is_idempotent_and_store_stays_readable(tmp_path):
+    tm = _tm(tmp_path, host_budget=1 * KB)
+    tm.put("a", _arr(1), "host")
+    tm.put("b", _arr(2), "host")
+    tm.close()
+    tm.close()
+    np.testing.assert_array_equal(tm.get("a"), _arr(1))
+
+
+def test_delete_leaves_no_orphan_checkpoint_files(tmp_path):
+    tm = _tm(tmp_path, host_budget=1 * KB)
+    for i in range(4):
+        tm.put(f"p{i}", _arr(i), "host")
+    for i in range(4):
+        tm.delete(f"p{i}")
+    tm.close()
+    ck = tmp_path / "ckpt"
+    assert not list(ck.rglob("*.npy"))
+    assert json.loads((ck / "MANIFEST.json").read_text())["keys"] == {}
+
+
+# -- sharing + pilot knobs ----------------------------------------------
+def test_checkpoint_store_is_shared_per_directory(tmp_path):
+    a = checkpoint_store(tmp_path / "shared")
+    b = make_backend("checkpoint", root=tmp_path / "shared")
+    assert a is b
+    a.put("k", _arr(5))
+    np.testing.assert_array_equal(b.get("k"), _arr(5))
+    a.close()
+    # a closed instance is replaced by a fresh reopen
+    c = checkpoint_store(tmp_path / "shared")
+    assert c is not a
+    np.testing.assert_array_equal(c.get("k"), _arr(5))
+    c.close()
+
+
+def test_pilot_description_provisions_checkpoint_tier(tmp_path):
+    svc = PilotComputeService()
+    try:
+        pilot = svc.submit_pilot(PilotComputeDescription(
+            backend="inprocess", memory_gb=0.25,
+            checkpoint_dir=str(tmp_path / "pckpt"), checkpoint_gb=0.5))
+        tm = pilot.tier_manager
+        assert tm is not None
+        assert tm.order[0] == "checkpoint"
+        assert tm.budget("checkpoint") == int(0.5 * 2 ** 30)
+        # two pilots naming the same dir share ONE store instance
+        pilot2 = svc.submit_pilot(PilotComputeDescription(
+            backend="inprocess", memory_gb=0.25,
+            checkpoint_dir=str(tmp_path / "pckpt")))
+        assert (pilot2.tier_manager.backends["checkpoint"]
+                is tm.backends["checkpoint"])
+    finally:
+        svc.cancel_all()
+
+
+def test_simulated_backend_provisions_checkpoint_tier(tmp_path):
+    from repro.core.backends.base import register_backend
+    from repro.core.backends.simulated import SimulatedClusterBackend
+    register_backend(SimulatedClusterBackend(substrate="slurm"))
+    svc = PilotComputeService()
+    try:
+        pilot = svc.submit_pilot(PilotComputeDescription(
+            backend="simulated", memory_gb=0.125,
+            checkpoint_dir=str(tmp_path / "sim")))
+        assert "checkpoint" in pilot.tier_manager.backends
+    finally:
+        svc.cancel_all()
+
+
+# -- acceptance: 3x-over-budget working set ------------------------------
+def test_kmeans_working_set_3x_budget_completes_with_checkpoint(tmp_path):
+    """Device+host budgets hold only ~1/3 of the points; without a
+    checkpoint tier the placement REFUSES, with one the run completes,
+    budgets hold, and numerics match an unmanaged reference."""
+    pts, _ = make_blobs(12_000, 8, d=8, seed=3)
+    parts = 12
+    part_bytes = pts.nbytes // parts
+    device_budget = 3 * part_bytes + part_bytes // 2   # ~1/4 of the set
+    host_budget = part_bytes + part_bytes // 2         # +1 partition
+
+    small = TierManager({"host": make_backend("host"),
+                         "device": make_backend("device")},
+                        {"device": device_budget, "host": host_budget},
+                        promote_threshold=0)
+    with pytest.raises(CapacityError):
+        DataUnit.from_array("toolarge", pts, parts, small.backends,
+                            tier="device", tier_manager=small)
+
+    tm = _tm(tmp_path, device_budget=device_budget,
+             host_budget=host_budget, promote_threshold=2)
+    du = DataUnit.from_array("pts3x", pts, parts, tm.backends,
+                             tier="device", tier_manager=tm)
+    assert du.resident_fraction("checkpoint") > 0     # real spill happened
+    r = kmeans(du, k=8, iters=3, seed=0)
+    tm.drain(timeout=30)
+    assert tm.peak_usage("device") <= device_budget
+    assert tm.peak_usage("host") <= host_budget
+    backends = {"host": make_backend("host"),
+                "device": make_backend("device")}
+    du_ref = DataUnit.from_array("ref3x", pts, parts, backends, tier="host")
+    r_ref = kmeans(du_ref, k=8, iters=3, seed=0)
+    np.testing.assert_allclose(r.sse_history, r_ref.sse_history, rtol=1e-4)
+    tm.close()

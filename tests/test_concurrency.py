@@ -193,6 +193,97 @@ def test_demotion_copy_runs_off_the_metadata_lock(tmp_path):
     tm.close()
 
 
+def test_checkpoint_demotion_copy_runs_off_the_metadata_lock(tmp_path):
+    """Checkpoint-tier variant of the demote-off-lock test: while a
+    victim's bytes drain into a gated PERSISTENT store, concurrent
+    readers of the victim and stagers of other keys make progress, and
+    the spill lands atomically (copy-first/delete-last)."""
+    from repro.core.memory import CheckpointBackend
+
+    gate = threading.Event()
+    copy_started = threading.Event()
+
+    class GatedCheckpoint(CheckpointBackend):
+        def put(self, name, value):
+            if name == "victim":
+                copy_started.set()
+                assert gate.wait(20)
+            super().put(name, value)
+
+    kb = 1024
+    tm = TierManager({"checkpoint": GatedCheckpoint(tmp_path / "ck"),
+                      "host": make_backend("host")},
+                     {"host": 2 * kb}, promote_threshold=0)
+    tm.put("victim", np.zeros(kb // 4, np.float32), "host")
+    tm.put("other", np.ones(kb // 4, np.float32), "host")
+    tm.get("other")                       # victim is now the LRU entry
+
+    t = threading.Thread(                 # displaces victim -> gated spill
+        target=tm.put,
+        args=("new", np.full(kb // 4, 2.0, np.float32), "host"))
+    t.start()
+    assert copy_started.wait(10)
+    # the spill is in flight and blocked on the gate; metadata-lock
+    # holders must still make progress, and the victim must stay readable
+    assert tm.stage("other", "checkpoint") == "checkpoint"
+    assert tm.tier_of("victim") == "host"     # flip happens copy-first
+    np.testing.assert_array_equal(tm.get("victim"),
+                                  np.zeros(kb // 4, np.float32))
+    gate.set()
+    t.join(20)
+    assert not t.is_alive()
+    assert tm.tier_of("victim") == "checkpoint"
+    assert tm.tier_of("new") == "host"
+    assert tm.usage("host") <= 2 * kb
+    np.testing.assert_array_equal(tm.get("victim"),
+                                  np.zeros(kb // 4, np.float32))
+    tm.close()
+
+
+def test_checkpoint_spill_hammer_readers_never_observe_holes(tmp_path):
+    """Concurrent readers during host->checkpoint demotions (and async
+    promotions back) never observe a missing partition, budgets hold, and
+    the post-close store is consistent with the final residency."""
+    part = 1024
+    tm = TierManager({"checkpoint": make_backend(
+                          "checkpoint", root=tmp_path / "ck"),
+                      "host": make_backend("host"),
+                      "device": make_backend("device")},
+                     {"device": 2 * part, "host": 2 * part},
+                     promote_threshold=0)
+    arr = np.arange(part * 2, dtype=np.float32).reshape(8, part // 4)
+    du = DataUnit.from_array("ck", arr, 8, tm.backends, tier="device",
+                             tier_manager=tm)
+    assert du.resident_fraction("checkpoint") > 0   # pressure spilled
+
+    idx = {"n": 0}
+
+    def churner():
+        # displacement pressure keeps demotions (and re-promotions) flowing
+        i = idx["n"]
+        tm.stage_async(du._key(i % 8), ("device", "host")[i % 2])
+        idx["n"] = i + 1
+
+    def reader():
+        total = sum(float(np.asarray(p).sum()) for p in du.partitions())
+        assert total == float(arr.sum())
+
+    _hammer([churner, reader, reader, reader], seconds=1.5)
+    tm.drain(timeout=30)
+    assert tm.peak_usage("device") <= 2 * part
+    assert tm.peak_usage("host") <= 2 * part
+    res = du.residency()
+    assert sum(res.values()) == du.num_partitions
+    np.testing.assert_array_equal(
+        np.concatenate(list(du.partitions())), arr)
+    tm.close()
+    # every checkpoint-resident partition is durably on disk post-close
+    store = tm.backends["checkpoint"]
+    for k in tm.resident_keys("checkpoint"):
+        assert (tmp_path / "ck" / f"{k}.npy").exists()
+        assert store.exists(k)
+
+
 def test_stager_close_drains_inflight_deterministically(tmp_path):
     """close() with moves in flight: queued stages are cancelled, running
     ones land atomically, stager threads are joined (no leaks between

@@ -1,0 +1,190 @@
+"""Fault injection: pilot death mid-map_reduce and recovery through the
+durable checkpoint tier.
+
+The contract under test (ISSUE 4): losing a pilot loses only its volatile
+tiers; partitions persisted to (or spilled into) the shared checkpoint
+store survive, and the retry path — map_reduce re-binding failed groups,
+or plain pilot-aware reads — restores them byte-identically instead of
+erroring."""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputeDataManager, DataUnit,
+                        PilotComputeDescription, PilotComputeService,
+                        PilotDataService, TierManager, make_backend)
+from repro.core.backends.base import register_backend
+from repro.core.backends.simulated import FaultPolicy, SimulatedClusterBackend
+from repro.core.mapreduce import map_reduce
+
+
+@pytest.fixture
+def service():
+    svc = PilotComputeService()
+    yield svc
+    svc.cancel_all()
+
+
+def _home_du(tmp_path, name="duf", parts=6, rows=64):
+    """A DU homed on a throw-away file store (rmtree = losing the original
+    staging source, so recovery MUST come from the checkpoint tier)."""
+    rng = np.random.default_rng(7)
+    arr = rng.normal(size=(parts * rows, 4)).astype(np.float32)
+    home = tmp_path / f"{name}-home"
+    du = DataUnit.from_array(name, arr, parts,
+                             {"file": make_backend("file", root=home)},
+                             tier="file")
+    return du, arr, home
+
+
+def _attach_tm(pilot, device_budget=None):
+    pilot.attach_tier_manager(TierManager(
+        {"host": make_backend("host"), "device": make_backend("device")},
+        {"device": device_budget}, promote_threshold=0))
+    return pilot
+
+
+def test_lose_volatile_keeps_only_checkpoint_residents(tmp_path):
+    tm = TierManager({"checkpoint": make_backend("checkpoint",
+                                                 root=tmp_path / "ck"),
+                      "host": make_backend("host"),
+                      "device": make_backend("device")},
+                     {"device": 1024, "host": 1024}, promote_threshold=0)
+    for i in range(6):
+        tm.put(f"p{i}", np.full(256, i, np.float32), "device")
+    spilled = set(tm.resident_keys("checkpoint"))
+    assert spilled                          # pressure reached the floor
+    lost = set(tm.lose_volatile())
+    assert lost == {f"p{i}" for i in range(6)} - spilled
+    for k in spilled:                       # durable survivors, intact
+        assert tm.tier_of(k) == "checkpoint"
+        np.testing.assert_array_equal(tm.get(k),
+                                      np.full(256, int(k[1:]), np.float32))
+    for k in lost:
+        assert tm.tier_of(k) is None
+    assert tm.usage("device") == 0 and tm.usage("host") == 0
+    tm.close()
+
+
+def test_pilot_loss_then_reads_restore_from_checkpoint(tmp_path, service):
+    """Registry-level recovery, no scheduler: pilot dies (volatile wiped),
+    the home store vanishes, and pilot-aware reads through a survivor
+    still return byte-identical data via the checkpoint home."""
+    pds = PilotDataService(checkpoint_dir=str(tmp_path / "ckhome"))
+    a = _attach_tm(service.submit_pilot(
+        PilotComputeDescription(backend="inprocess")))
+    b = _attach_tm(service.submit_pilot(
+        PilotComputeDescription(backend="inprocess")))
+    pds.register_pilot(a)
+    pds.register_pilot(b)
+    du, arr, home = _home_du(tmp_path)
+    pds.register(du, persist=True)
+    pds.flush_checkpoints()                 # durability barrier
+    du.replicate_to_pilot(a)                # a holds every replica
+    shutil.rmtree(home)                     # original staging source gone
+    a.tier_manager.lose_volatile()          # node death
+    parts = np.array_split(arr, du.num_partitions, axis=0)
+    for i in range(du.num_partitions):
+        got = np.asarray(du.partition(i, pilot=b))
+        np.testing.assert_array_equal(got, parts[i])
+    assert pds.counters["checkpoint_restores"] >= du.num_partitions
+    pds.close()
+
+
+def test_map_reduce_retries_failed_group_onto_survivor(tmp_path, service):
+    """Kill a pilot mid-map_reduce: its group CU fails, the engine
+    re-binds the failed partitions onto the surviving pilot, and the
+    result matches the no-failure reference; the recovered partitions are
+    byte-identical, restored through the checkpoint tier."""
+    register_backend(SimulatedClusterBackend(
+        substrate="slurm",
+        policy=FaultPolicy(fail_devices_at=0, lose_memory=True)))
+    pds = PilotDataService(checkpoint_dir=str(tmp_path / "ckhome"))
+    flaky = _attach_tm(service.submit_pilot(
+        PilotComputeDescription(backend="simulated")))
+    backup = _attach_tm(service.submit_pilot(
+        PilotComputeDescription(backend="inprocess")))
+    pds.register_pilot(flaky)
+    pds.register_pilot(backup)
+    manager = ComputeDataManager(service)
+
+    du, arr, home = _home_du(tmp_path, parts=6)
+    pds.register(du, persist=True)
+    pds.flush_checkpoints()
+    # replica placement routes half the groups to the doomed pilot
+    du.replicate_to_pilot(flaky, parts=[0, 1, 2])
+    du.replicate_to_pilot(backup, parts=[3, 4, 5])
+    shutil.rmtree(home)                     # checkpoint is the only source
+
+    reference = float(np.asarray(arr, np.float64).sum())
+    total = map_reduce(du, lambda p: np.asarray(p, np.float64).sum(),
+                       lambda x, y: x + y, manager=manager, jit_map=False,
+                       retries=2)
+    assert total == pytest.approx(reference, rel=1e-6)
+    # the flaky pilot really did die and really did lose its memory
+    assert flaky.state.value == "Failed"
+    assert flaky.tier_manager.usage("device") == 0
+    # recovery came through the durable store, byte-identically
+    assert pds.counters["checkpoint_restores"] > 0
+    parts = np.array_split(arr, du.num_partitions, axis=0)
+    for i in range(du.num_partitions):
+        np.testing.assert_array_equal(
+            np.asarray(du.partition(i, pilot=backup)), parts[i])
+    pds.close()
+
+
+def test_map_reduce_raises_when_retries_exhausted(tmp_path, service):
+    register_backend(SimulatedClusterBackend(
+        substrate="slurm",
+        policy=FaultPolicy(fail_devices_at=0, lose_memory=True)))
+    pds = PilotDataService(checkpoint_dir=str(tmp_path / "ckhome"))
+    flaky = _attach_tm(service.submit_pilot(
+        PilotComputeDescription(backend="simulated")))
+    pds.register_pilot(flaky)
+    manager = ComputeDataManager(service)
+    du, arr, home = _home_du(tmp_path, parts=2)
+    pds.register(du, persist=True)
+    with pytest.raises(RuntimeError, match="lost its devices"):
+        map_reduce(du, lambda p: float(np.asarray(p).sum()),
+                   lambda x, y: x + y, manager=manager, jit_map=False,
+                   retries=1)
+    pds.close()
+
+
+def test_spilled_partitions_survive_pilot_death_without_persist(tmp_path,
+                                                                service):
+    """The spill path alone is a recovery path: partitions a pilot demoted
+    into the shared checkpoint store under pressure (never explicitly
+    persisted) survive its death and restore through the service."""
+    store_dir = str(tmp_path / "spill-home")
+    pds = PilotDataService(checkpoint_dir=store_dir)
+    du, arr, home = _home_du(tmp_path, parts=4)
+    part_bytes = du.nbytes() // 4
+    # the pilot's volatile tiers hold ONE partition; the rest spill into
+    # the shared durable store on replication
+    a = service.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    a.attach_tier_manager(TierManager(
+        {"checkpoint": make_backend("checkpoint", root=store_dir),
+         "host": make_backend("host"), "device": make_backend("device")},
+        {"device": part_bytes + part_bytes // 2, "host": part_bytes // 2},
+        promote_threshold=0))
+    b = _attach_tm(service.submit_pilot(
+        PilotComputeDescription(backend="inprocess")))
+    pds.register_pilot(a)
+    pds.register_pilot(b)
+    pds.register(du)
+    du.replicate_to_pilot(a)                # overflow demotes to checkpoint
+    spilled = [k for k in a.tier_manager.resident_keys("checkpoint")]
+    assert spilled
+    a.tier_manager.close()                  # flush spill writes, fsync
+    shutil.rmtree(home)
+    a.tier_manager.lose_volatile()
+    pds.unregister_pilot(a.id)              # the pilot is fully gone
+    parts = np.array_split(arr, du.num_partitions, axis=0)
+    for i, key in enumerate(du._key(j) for j in range(4)):
+        if key in spilled:
+            np.testing.assert_array_equal(
+                np.asarray(du.partition(i, pilot=b)), parts[i])
+    assert pds.counters["checkpoint_restores"] >= len(spilled)
+    pds.close()

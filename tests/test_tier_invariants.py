@@ -1,0 +1,147 @@
+"""Property-based tier invariants (hypothesis; deterministic stub fallback).
+
+Random put/read/stage/delete/pressure/close sequences over a budgeted
+three-tier hierarchy (device/host/checkpoint) must uphold the managed-
+memory contract:
+
+  * no tier ever exceeds its byte budget (peak accounting included);
+  * no partition is ever lost: every live key is resident in exactly one
+    managed tier and reads return exactly the bytes last written;
+  * `close()` is a durability barrier: no half-written temporaries, no
+    orphan checkpoint files (data files on disk correspond 1:1 with the
+    fsync'd manifest), and a reopened store serves the same keys/bytes.
+"""
+import json
+import shutil
+import tempfile
+from pathlib import Path
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CapacityError, CheckpointBackend, TierManager, \
+    make_backend
+
+KB = 1024
+_KEYS = [f"k{i}" for i in range(5)]
+_TIERS = ("checkpoint", "host", "device")
+
+
+def _decode(op: int):
+    """One opcode -> (kind, key, tier, size_kb); modular decode keeps the
+    hypothesis stub's integer streams expressive."""
+    key = _KEYS[op % len(_KEYS)]
+    kind = (op // 5) % 6        # 0,1: put  2: read  3: stage  4: delete
+    #                             5: pressure-filler
+    tier = _TIERS[(op // 30) % len(_TIERS)]
+    size_kb = 1 + (op // 90) % 2
+    return kind, key, tier, size_kb
+
+
+def _apply(tm, model, op: int, fill_no: int) -> None:
+    kind, key, tier, size_kb = _decode(op)
+    if kind in (0, 1):
+        val = np.full((size_kb * KB // 4,), op, dtype=np.float32)
+        try:
+            tm.put(key, val, tier)
+            model[key] = val
+        except CapacityError:
+            pass                        # refusal is allowed; loss is not
+    elif kind == 2 and key in model:
+        np.testing.assert_array_equal(tm.get(key), model[key])
+    elif kind == 3 and key in model:
+        try:
+            tm.stage(key, tier)
+        except CapacityError:
+            pass
+    elif kind == 4:
+        tm.delete(key)
+        model.pop(key, None)
+    elif kind == 5:
+        try:
+            tm.put(f"fill{fill_no % 3}",
+                   np.full((KB // 4,), -1.0, np.float32), "device")
+        except CapacityError:
+            pass
+
+
+def _check_invariants(tm, model, budgets) -> None:
+    for tier, budget in budgets.items():
+        if budget is not None:
+            assert tm.usage(tier) <= budget, tier
+            assert tm.peak_usage(tier) <= budget, tier
+    for key, val in model.items():
+        resident = [t for t in tm.order if key in tm.resident_keys(t)]
+        assert len(resident) == 1, f"{key} resident in {resident}"
+        np.testing.assert_array_equal(tm.get(key), val)
+
+
+def _run_sequence(ops, budgets):
+    root = Path(tempfile.mkdtemp(prefix="tier_inv_"))
+    store = CheckpointBackend(root / "ckpt")
+    tm = TierManager({"checkpoint": store,
+                      "host": make_backend("host"),
+                      "device": make_backend("device")},
+                     budgets, promote_threshold=0)
+    model = {}
+    try:
+        for n, op in enumerate(ops):
+            _apply(tm, model, op, n)
+            _check_invariants(tm, model, budgets)
+        tm.close()
+        _check_invariants(tm, model, budgets)   # close loses nothing
+        return tm, store, model, root
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(st.integers(0, 10_000), min_size=1, max_size=40))
+def test_random_ops_respect_budgets_and_never_lose_partitions(ops):
+    _run_sequence(ops, {"device": 2 * KB, "host": 2 * KB})
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(st.integers(0, 10_000), min_size=1, max_size=40),
+       ckpt_budget_kb=st.sampled_from([4, 8, 0]))
+def test_random_ops_with_bounded_checkpoint_tier(ops, ckpt_budget_kb):
+    """Budgeting the durable floor too: refusals allowed, loss is not."""
+    _run_sequence(ops, {"device": 2 * KB, "host": 2 * KB,
+                        "checkpoint": ckpt_budget_kb * KB or None})
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(st.integers(0, 10_000), min_size=1, max_size=40))
+def test_close_leaves_no_orphan_checkpoint_files(ops):
+    """After close(): files on disk == fsync'd manifest == live
+    checkpoint-resident keys, no temporaries, and a REOPENED store agrees
+    byte-for-byte."""
+    root = Path(tempfile.mkdtemp(prefix="tier_orphan_"))
+    budgets = {"device": 2 * KB, "host": 2 * KB}
+    store = CheckpointBackend(root / "ckpt")
+    tm = TierManager({"checkpoint": store,
+                      "host": make_backend("host"),
+                      "device": make_backend("device")},
+                     budgets, promote_threshold=0)
+    model = {}
+    try:
+        for n, op in enumerate(ops):
+            _apply(tm, model, op, n)
+        tm.close()
+        ckdir = root / "ckpt"
+        on_disk = {p.relative_to(ckdir).with_suffix("").as_posix()
+                   for p in ckdir.rglob("*.npy")}
+        manifest = json.loads((ckdir / "MANIFEST.json").read_text())["keys"]
+        resident = set(tm.resident_keys("checkpoint"))
+        assert on_disk == set(manifest), "orphan or missing data files"
+        assert resident <= on_disk, "resident key without a durable file"
+        assert not list(ckdir.rglob("*.tmp")), "half-written temporary"
+        reopened = CheckpointBackend(ckdir)
+        assert set(reopened.keys()) == set(manifest)
+        for key in resident:
+            if key in model:
+                np.testing.assert_array_equal(reopened.get(key), model[key])
+            else:
+                assert reopened.exists(key)     # pressure filler
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

@@ -1,0 +1,90 @@
+"""Pilot-API v2 bench: cross-pilot sibling reads vs home re-pull.
+
+The ROADMAP item behind the PR 5 redesign: a CU bound to pilot B that
+needs partitions pilot A already holds should read them over the
+(modelled) interconnect instead of re-pulling from the home store.  Here
+the home placement is a throttled file store (the paper's simulated
+Stampede-disk shared filesystem), pilot A holds a full replica of the
+working set, and pilot B pulls every partition through:
+
+  * ``home``    — no InterconnectModel: every pull goes back to the slow
+                  home store first (the PR 3 order);
+  * ``sibling`` — InterconnectModel attached (fast fabric, slow home
+                  model, simulate=True so sibling transfers charge their
+                  modelled cost): every pull is served from A's memory.
+
+The gate asserts sibling reads actually won AND were measurably faster.
+A second record drives the full multi-pilot KMeans through the
+PilotSession façade end-to-end (the acceptance path).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import (InterconnectModel, PROFILES, PilotSession,
+                        make_blobs)
+
+
+def _pull_workload(interconnect, parts: int, rows: int, tag: str):
+    """Seed pilot A with a full replica, then time pilot B pulling every
+    partition through the data service."""
+    pts = np.arange(parts * rows * 8, dtype=np.float32).reshape(-1, 8)
+    with PilotSession(interconnect=interconnect,
+                      name=f"bench-{tag}") as s:
+        a = s.add_pilot(memory_gb=0.25)
+        b = s.add_pilot(memory_gb=0.25)
+        du = s.data("ws", pts, parts=parts, tier="file",
+                    profile=PROFILES["stampede_disk"])
+        du.replicate_to_pilot(a)        # seeded once, outside the timing
+        t0 = time.perf_counter()
+        for i in range(parts):
+            du.partition(i, pilot=b)
+        dt = time.perf_counter() - t0
+        counters = dict(s.data_service.counters)
+    return dt, counters
+
+
+def run(quick: bool = False):
+    parts = 6 if quick else 8
+    rows = 8_192 if quick else 32_768   # 256KB / 1MB partitions
+
+    t_home, c_home = _pull_workload(None, parts, rows, "home")
+    t_sib, c_sib = _pull_workload(InterconnectModel(simulate=True),
+                                  parts, rows, "sibling")
+    speedup = t_home / t_sib if t_sib > 0 else float("inf")
+    common.emit("bench_session.home_repull", t_home,
+                f"parts={parts}")
+    common.emit("bench_session.sibling_reads", t_sib,
+                f"speedup_vs_home={speedup:.2f}x "
+                f"sibling={c_sib['sibling_reads']}")
+    common.record("bench_session.sibling_reads",
+                  seconds=t_sib, home_seconds=t_home,
+                  speedup_vs_home=speedup, parts=parts,
+                  sibling_reads=c_sib["sibling_reads"],
+                  home_reads_costed=c_sib["home_reads"],
+                  home_variant_sibling_reads=c_home["sibling_reads"])
+
+    # façade end-to-end: multi-pilot KMeans through PilotSession
+    pts, _ = make_blobs(20_000 if quick else 60_000, 8, d=8, seed=0)
+    t0 = time.perf_counter()
+    with PilotSession(name="bench-facade") as s:
+        pilots = s.add_pilots(2, memory_gb=0.1)
+        du = s.data("pts", pts, parts=8)
+        du.replicate_to_pilot(pilots[0], parts=range(0, 4))
+        du.replicate_to_pilot(pilots[1], parts=range(4, 8))
+        res = s.kmeans(du, k=8, iters=3)
+        used = len(s.manager.stats()["per_pilot"])
+    dt = time.perf_counter() - t0
+    common.emit("bench_session.facade_kmeans", dt,
+                f"pilots_used={used} sse={res.sse_history[-1]:.1f}")
+    common.record("bench_session.facade_kmeans", seconds=dt,
+                  completed=True, pilots_used=used,
+                  sse=float(res.sse_history[-1]))
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -6,12 +6,14 @@ evictions) to a JSON artifact (default ``BENCH_pr2.json``; override with
 ``--json PATH``) so the perf trajectory is tracked across PRs.
 
 ``--quick`` is the CI smoke path: it runs the tiering, map_reduce,
-multi-pilot, and checkpoint benches, writes the artifact, and exits
-non-zero if the pipelined map_reduce engine is slower than the sequential
-baseline, the 2-pilot distributed Pilot-Data run is below 1.3x the
-single-pilot wall clock on the 2x-over-budget workload, or the
+multi-pilot, checkpoint, and session benches, writes the artifact, and
+exits non-zero if the pipelined map_reduce engine is slower than the
+sequential baseline, the 2-pilot distributed Pilot-Data run is below
+1.3x the single-pilot wall clock on the 2x-over-budget workload, the
 3x-over-budget checkpoint-tier workload fails to complete / loses to
-naive re-staging from the original file store.
+naive re-staging from the original file store, or cost-modelled
+cross-pilot sibling reads fail to beat re-pulling from a simulated slow
+home store.
 """
 from __future__ import annotations
 
@@ -23,9 +25,10 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr4.json"
+DEFAULT_JSON = "BENCH_pr5.json"
 MULTIPILOT_MIN_SPEEDUP = 1.3
 CHECKPOINT_MIN_SPEEDUP = 1.0
+SESSION_MIN_SPEEDUP = 1.5
 
 
 def _json_path(argv) -> str:
@@ -73,6 +76,25 @@ def _gate(records) -> None:
               f"{ck.get('speedup_vs_restage'):.2f}x vs naive re-staging "
               f"(target {CHECKPOINT_MIN_SPEEDUP}x)", file=sys.stderr)
         raise SystemExit(1)
+    ss = rows.get("bench_session.sibling_reads")
+    if ss is None:
+        print("bench gate: no bench_session.sibling_reads record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if not ss.get("sibling_reads", 0):
+        print("bench gate: interconnect run served zero sibling reads",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if ss.get("speedup_vs_home", 0.0) < SESSION_MIN_SPEEDUP:
+        print(f"bench gate: cross-pilot sibling reads only "
+              f"{ss.get('speedup_vs_home'):.2f}x vs home re-pull "
+              f"(target {SESSION_MIN_SPEEDUP}x)", file=sys.stderr)
+        raise SystemExit(1)
+    fk = rows.get("bench_session.facade_kmeans")
+    if fk is None or not fk.get("completed"):
+        print("bench gate: PilotSession façade KMeans did not complete",
+              file=sys.stderr)
+        raise SystemExit(1)
 
 
 def main() -> None:
@@ -80,20 +102,23 @@ def main() -> None:
                             bench_fig7_storage, bench_fig8_profiles,
                             bench_fig9_kmeans, bench_kernels,
                             bench_mapreduce, bench_multipilot,
-                            bench_roofline, bench_tiering, bench_train_step)
+                            bench_roofline, bench_session, bench_tiering,
+                            bench_train_step)
     from benchmarks import common
     quick = "--quick" in sys.argv
     json_path = _json_path(sys.argv)
     print("name,us_per_call,derived")
     if quick:
-        # CI smoke: the tiering + map_reduce + multipilot + checkpoint
-        # benches exercise pilots, DUs, the managed hierarchy, eviction
-        # policies, the pipelined engine, the distributed Pilot-Data
-        # layer, and the durable spill/restore path end-to-end in seconds
+        # CI smoke: the tiering + map_reduce + multipilot + checkpoint +
+        # session benches exercise pilots, DUs, the managed hierarchy,
+        # eviction policies, the pipelined engine, the distributed
+        # Pilot-Data layer, the durable spill/restore path, and the v2
+        # façade + cross-pilot interconnect reads end-to-end in seconds
         bench_tiering.run(quick=True)
         bench_mapreduce.run(quick=True)
         bench_multipilot.run(quick=True)
         bench_checkpoint.run(quick=True)
+        bench_session.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -102,7 +127,7 @@ def main() -> None:
     for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
                 bench_mapreduce, bench_multipilot, bench_checkpoint,
-                bench_train_step, bench_roofline):
+                bench_session, bench_train_step, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

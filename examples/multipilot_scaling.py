@@ -1,37 +1,34 @@
-"""Scaling out with multi-pilot distributed Pilot-Data.
+"""Scaling out with multi-pilot distributed Pilot-Data (Pilot-API v2).
 
-Two pilots each own a private TierManager (their retained memory ask); a
-PilotDataService tracks which pilot holds which partition.  The working
-set is replicated half-and-half, so the replica-aware scheduler routes
-each map_reduce group to the pilot already holding its data, each pilot
-reads through its OWN tiers, and a write invalidates every replica
-coherently.
+Two pilots each own a private TierManager (their retained memory ask);
+the session's PilotDataService tracks which pilot holds which partition,
+and an InterconnectModel prices cross-pilot transfers: when one pilot
+needs a partition a sibling already holds, the fetch path reads it over
+the modelled fabric link instead of re-pulling from the home store —
+and a write still invalidates every replica coherently.
 
     PYTHONPATH=src python examples/multipilot_scaling.py
 """
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
 import numpy as np
 
-from repro.core import (ComputeDataManager, DataUnit,
-                        PilotComputeDescription, PilotComputeService,
-                        PilotDataService, kmeans, make_backend, make_blobs)
+from repro.core import InterconnectModel, PilotSession, make_blobs
 
 
 def main():
-    svc = PilotComputeService()
-    pds = PilotDataService()
-    manager = ComputeDataManager(svc)
-    try:
-        # two pilots, each with its own managed memory (device budget =
-        # the memory_gb ask), both joined to the data service
-        pilots = [svc.submit_pilot(PilotComputeDescription(
-            backend="inprocess", memory_gb=0.05)) for _ in range(2)]
-        for p in pilots:
-            pds.register_pilot(p)
+    pts, _ = make_blobs(8_000, 8, d=16, seed=0)
 
-        # the home placement: shared (cluster) storage the pilots pull from
-        pts, _ = make_blobs(8_000, 8, d=16, seed=0)
-        du = pds.register(DataUnit.from_array(
-            "points", pts, 8, {"host": make_backend("host")}, tier="host"))
+    # the fabric: 12.5 GB/s default pilot-to-pilot links, a much slower
+    # modelled home re-pull — so sibling replicas win the fetch race
+    with PilotSession(interconnect=InterconnectModel()) as s:
+        pilots = s.add_pilots(2, memory_gb=0.05)
+
+        # home placement: shared (cluster) storage the pilots pull from
+        du = s.data("points", pts, parts=8)
 
         # distribute the working set: half the partitions to each pilot
         du.replicate_to_pilot(pilots[0], parts=range(0, 4))
@@ -40,22 +37,28 @@ def main():
             print(f"{p.id}: replica residency {du.replica_residency(p)}")
 
         # replica-aware map_reduce: each pilot's group reads its own tiers
-        r = kmeans(du, k=8, iters=3, manager=manager)
+        r = s.kmeans(du, k=8, iters=3)
+        sched = s.manager.stats()
         print(f"kmeans sse={r.sse_history[-1]:.3e} "
-              f"({len(manager.history)} CUs, "
-              f"pilots used: {sorted({h['pilot'] for h in manager.history})})")
+              f"({sched['submitted']} CUs over "
+              f"{len(sched['per_pilot'])} pilots)")
+
+        # cross-pilot replica read: pilot 1 pulls a partition only pilot 0
+        # holds — the cost model routes it over the fabric, not home
+        before = s.data_service.counters["sibling_reads"]
+        du.partition(0, pilot=pilots[1])
+        print(f"sibling reads over the modelled interconnect: "
+              f"{s.data_service.counters['sibling_reads'] - before}")
 
         # coherent write: replicas are invalidated, readers re-pull
         du.update_partition(0, np.zeros_like(np.asarray(du.partition(0))))
         print(f"after write: partition 0 holders = "
-              f"{pds.holders(du._key(0))} (re-pulled on next read)")
+              f"{s.data_service.holders(du._key(0))} "
+              f"(re-pulled on next read)")
         np.testing.assert_array_equal(
             du.partition(0, pilot=pilots[0]),
             np.zeros_like(np.asarray(du.partition(0))))
         print("replica read after invalidation is coherent")
-    finally:
-        pds.close()
-        svc.cancel_all()
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
-"""Quickstart: the Pilot-API in ~40 lines.
+"""Quickstart: the Pilot-API v2 in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Provisions a pilot (retained device allocation), stages a DataUnit through
-the storage tiers, runs Compute-Units through the data-aware scheduler, and
-finishes with a map_reduce over the in-memory tier.
+One PilotSession owns the whole stack — pilots (retained device
+allocations), Data-Units (tiered, replica-managed), the data-aware
+scheduler, and deterministic teardown.  The v1 objects it composes
+(PilotComputeService / ComputeDataManager / PilotDataService) remain
+public; see examples/kmeans_pilot.py for the legacy surface.
 """
 import sys
 from pathlib import Path
@@ -14,40 +16,39 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ComputeDataManager, DataUnit, PilotComputeDescription,
-                        PilotComputeService, make_backend, map_reduce)
+from repro.core import PilotSession
 
 
 def main():
-    # 1. provision a Pilot-Compute (placeholder allocation; CUs multiplex on it)
-    svc = PilotComputeService()
-    pilot = svc.submit_pilot(PilotComputeDescription(
-        backend="inprocess", num_devices=1, affinity="demo"))
-    manager = ComputeDataManager(svc)
-    print(f"pilot up: {pilot} (provisioned in {pilot.provision_time:.3f}s)")
-
-    # 2. a Compute-Unit is just a function + late binding
-    cu = manager.run(lambda a, b: a @ b,
-                     np.eye(4, dtype=np.float32), np.arange(16.0).reshape(4, 4))
-    print("CU result trace:", np.asarray(cu.result()).trace())
-
-    # 3. Data-Units: one API over file / host / device(HBM) tiers
-    backends = {"file": make_backend("file", root="/tmp/quickstart_du"),
-                "host": make_backend("host"),
-                "device": make_backend("device")}
     data = np.random.default_rng(0).normal(size=(8192, 16)).astype(np.float32)
-    du = DataUnit.from_array("matrix", data, num_partitions=4,
-                             backends=backends, tier="file")
-    du.to_tier("device")  # stage file -> HBM (Pilot-Data Memory)
-    print(f"staged {du} via {[t['to'] for t in du.transfer_log]}")
 
-    # 4. MapReduce over the in-memory DU (no restaging between iterations)
-    total = map_reduce(du, lambda p: jnp.sum(p * p), lambda a, b: a + b,
-                       pilot=pilot)
-    print(f"sum of squares via map_reduce: {float(total):.1f} "
-          f"(numpy check: {float((data * data).sum()):.1f})")
+    with PilotSession() as s:
+        # 1. provision a Pilot-Compute with a retained-memory ask (its own
+        #    managed device/host tier hierarchy)
+        pilot = s.add_pilot(num_devices=1, memory_gb=0.05, affinity="demo")
+        print(f"pilot up: {pilot} (provisioned in "
+              f"{pilot.provision_time:.3f}s)")
 
-    svc.cancel_all()
+        # 2. a Compute-Unit is just a function + late binding
+        cu = s.run(lambda a, b: a @ b, np.eye(4, dtype=np.float32),
+                   np.arange(16.0).reshape(4, 4))
+        print("CU result trace:", np.asarray(cu.result()).trace())
+
+        # 3. a Data-Unit: partitioned, session-bound, replica-managed
+        du = s.data("matrix", data, parts=4)
+        du.replicate_to_pilot(pilot)    # stage the working set into HBM
+        print(f"staged {du}: replica residency "
+              f"{du.replica_residency(pilot)}")
+
+        # 4. MapReduce through the replica-aware pipelined engine
+        total = s.map_reduce(du, lambda p: jnp.sum(p * p),
+                             lambda a, b: a + b)
+        print(f"sum of squares via map_reduce: {float(total):.1f} "
+              f"(numpy check: {float((data * data).sum()):.1f})")
+
+        print("scheduler:", s.stats()["scheduler"])
+    # <- session teardown: replication drained, checkpoints flushed,
+    #    TierManagers closed, pilots released
     print("quickstart OK")
 
 

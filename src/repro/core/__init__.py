@@ -1,5 +1,16 @@
 """Pilot-API: the paper's unified abstraction, TPU-native.
 
+v2 (the PilotSession façade — one declarative surface, one lifecycle):
+
+    from repro.core import PilotSession
+
+    with PilotSession() as s:
+        s.add_pilots(2, memory_gb=0.05)
+        du = s.data("pts", points, parts=8)
+        total = s.map_reduce(du, map_fn, reduce_fn)
+
+v1 (the composable objects underneath — still public, still supported):
+
     from repro.core import (PilotComputeService, PilotComputeDescription,
                             ComputeDataManager, DataUnit, make_backend)
 
@@ -19,8 +30,12 @@ from repro.core.memory import (CheckpointBackend, DURABLE_TIERS, PROFILES,
                                TIERS, TierProfile, checkpoint_store,
                                make_backend)
 from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
+                              DurabilityDescription, MemoryDescription,
                               PilotCompute, PilotComputeDescription, State)
 from repro.core.pilotdata import PilotDataService
+from repro.core.scheduling import (InterconnectModel, Link, LocalityPolicy,
+                                   LocalityWeights, SchedulingPolicy)
+from repro.core.session import PilotSession
 from repro.core.tiering import (CapacityError, EvictionPolicy, GDSFPolicy,
                                 LRUPolicy, TierManager, make_policy,
                                 make_tier_manager)
@@ -34,4 +49,8 @@ __all__ = [
     "make_tier_manager", "EvictionPolicy", "LRUPolicy", "GDSFPolicy",
     "make_policy", "PilotDataService", "CheckpointBackend",
     "checkpoint_store", "DURABLE_TIERS",
+    # Pilot-API v2
+    "PilotSession", "MemoryDescription", "DurabilityDescription",
+    "SchedulingPolicy", "LocalityPolicy", "LocalityWeights",
+    "InterconnectModel", "Link",
 ]

@@ -18,6 +18,22 @@ class ComputeBackend:
     def provision(self, desc: PilotComputeDescription) -> PilotCompute:
         raise NotImplementedError
 
+    @staticmethod
+    def attach_managed_memory(pilot: PilotCompute,
+                              desc: PilotComputeDescription,
+                              mesh=None) -> PilotCompute:
+        """Provision the pilot's retained memory from the description's
+        `memory`/`durability` blocks (one TierManager: memory_gb ->
+        device budget, host_memory_gb -> host budget, checkpoint_dir/gb
+        -> the durable spill tier shared per directory).  No-op without a
+        memory ask.  Shared by every adaptor so all substrates
+        participate identically in multi-pilot Pilot-Data."""
+        from repro.core.tiering import tier_manager_for_pilot
+        tm = tier_manager_for_pilot(desc, mesh=mesh)
+        if tm is not None:
+            pilot.attach_tier_manager(tm)
+        return pilot
+
     def release(self, pilot: PilotCompute) -> None:
         pilot.cancel()
 

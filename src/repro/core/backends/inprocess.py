@@ -49,14 +49,9 @@ class InProcessBackend(ComputeBackend):
         mesh = jax.sharding.Mesh(np.array(devices).reshape(shape), axes,
                                  **mesh_axis_types(len(shape)))
         pilot = PilotCompute(desc, mesh)
-        # per-pilot managed memory: memory_gb/host_memory_gb bound the
-        # volatile tiers; checkpoint_dir/checkpoint_gb add the durable
-        # spill tier (shared per directory across pilots — the recovery
-        # home), all provisioned from the same resource description
-        from repro.core.tiering import tier_manager_for_pilot
-        tm = tier_manager_for_pilot(desc, mesh=mesh)
-        if tm is not None:
-            pilot.attach_tier_manager(tm)
+        # per-pilot managed memory from desc.memory / desc.durability
+        # (volatile budgets + the shared durable spill tier)
+        self.attach_managed_memory(pilot, desc, mesh=mesh)
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

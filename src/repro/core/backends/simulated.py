@@ -112,13 +112,11 @@ class SimulatedClusterBackend(ComputeBackend):
             mesh = jax.sharding.Mesh(np.array(devices), ("data",),
                                      **mesh_axis_types(1))
         pilot = SimulatedPilot(desc, mesh, self.policy)
-        # same per-pilot managed memory as the inprocess adaptor, so
-        # simulated substrates participate in replica-aware scheduling /
+        # same per-pilot managed memory as the inprocess adaptor (one
+        # shared provisioning path in ComputeBackend), so simulated
+        # substrates participate in replica-aware scheduling /
         # multi-pilot Pilot-Data exactly like real ones
-        from repro.core.tiering import tier_manager_for_pilot
-        tm = tier_manager_for_pilot(desc, mesh=mesh)
-        if tm is not None:
-            pilot.attach_tier_manager(tm)
+        self.attach_managed_memory(pilot, desc, mesh=mesh)
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

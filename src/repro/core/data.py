@@ -175,11 +175,19 @@ class DataUnit:
             yield self.partition(i)
 
     def nbytes(self) -> int:
+        return sum(self.partition_nbytes(i)
+                   for i in range(self.num_partitions))
+
+    def partition_nbytes(self, i: int) -> int:
+        """One partition's size in bytes without pulling its payload
+        through a (possibly throttled) tier — TierManager metadata when
+        managed, else the home backend's nbytes (FileBackend answers from
+        the .npy header).  Used by the interconnect cost model to price
+        transfers."""
+        key = self._key(i)
         if self.tier_manager is not None:
-            return sum(self.tier_manager.entry_nbytes(self._key(i))
-                       for i in range(self.num_partitions))
-        be = self._backend(self.tier)
-        return sum(be.nbytes(self._key(i)) for i in range(self.num_partitions))
+            return int(self.tier_manager.entry_nbytes(key))
+        return int(self._backend(self.tier).nbytes(key))
 
     # -- managed-hierarchy surface -------------------------------------
     def residency(self) -> Dict[str, int]:

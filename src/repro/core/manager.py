@@ -22,27 +22,27 @@ majority of its data.  On binding, the manager queues pre-binding
 stage-in: the partitions the CU declared it reads first are replicated
 toward the CHOSEN pilot's tiers, and the pilot waits for those copies to
 land before the CU body runs (paper's ensure-availability semantics).
+
+Since PR 5 the scoring itself is a pluggable strategy
+(repro.core.scheduling): ComputeDataManager drives a SchedulingPolicy,
+whose default LocalityPolicy reproduces the scoring described above
+bit-for-bit; the W_* constants re-exported here live with the policy.
 """
 from __future__ import annotations
 
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.backends.base import get_backend
-from repro.core.data import DataUnit
 from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription, State)
-
-# locality score weights (device residency dominates, as HBM>host>disk;
-# W_CKPT ranks checkpoint-tier residency below host but above absent — a
-# pilot that spilled a partition to its durable tier restores it from
-# node-local disk, which still beats refetching from the home store; and
-# W_LOCAL rewards any-tier replica stickiness so a pilot whose replica was
-# demoted under pressure still beats one that must refetch everything)
-W_DEVICE, W_AFFINITY, W_HOST, W_CKPT, W_LOCAL, W_QUEUE = (
-    100.0, 10.0, 5.0, 3.0, 2.0, 1.0)
+# the locality score weights live with the policies now; re-exported here
+# because four PRs of code and tests import them from manager
+from repro.core.scheduling import (LocalityPolicy, SchedulingPolicy,  # noqa: F401
+                                   W_AFFINITY, W_CKPT, W_DEVICE, W_HOST,
+                                   W_LOCAL, W_QUEUE)
 
 
 class PilotComputeService:
@@ -76,92 +76,82 @@ class PilotComputeService:
 
 
 class ComputeDataManager:
-    """Late-binding scheduler: scores (pilot x CU) by data locality."""
+    """Late-binding scheduler: scores (pilot x CU) through a pluggable
+    SchedulingPolicy (default LocalityPolicy — the historical W_* data-
+    locality scoring, now a strategy in repro.core.scheduling).
 
-    def __init__(self, service: PilotComputeService):
+    `history` keeps the most recent `history_limit` placement decisions
+    (a bounded window — long-running sessions serving millions of CUs
+    must not grow driver memory without limit); `stats()` summarizes the
+    whole lifetime regardless of the window.
+    """
+
+    def __init__(self, service: PilotComputeService,
+                 policy: Optional[SchedulingPolicy] = None,
+                 history_limit: int = 1024):
         self.service = service
-        self.history: List[dict] = []
+        self.policy: SchedulingPolicy = policy or LocalityPolicy()
+        self.history_limit = max(1, int(history_limit))
+        self.history: List[dict] = []   # bounded: see _record
+        self._stats_lock = threading.Lock()
+        self._submitted = 0
+        self._per_pilot: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _per_pilot_du(pilot: PilotCompute, du: DataUnit):
-        """The DU's PilotDataService when this (pilot, du) pair is scored
-        per-pilot: the DU must be service-bound and the pilot must be a
-        registered replica holder candidate."""
-        pds = getattr(du, "pilot_data_service", None)
-        if (pds is not None and getattr(pilot, "tier_manager", None)
-                is not None and pds.knows(pilot.id)):
-            return pds
-        return None
+    def score(self, pilot: PilotCompute,
+              cu_desc: ComputeUnitDescription) -> float:
+        """Policy delegation (kept as a method: four PRs of tests and
+        benchmarks call manager.score directly)."""
+        return self.policy.score(pilot, cu_desc)
 
-    def _device_tier_hits(self, pilot: PilotCompute,
-                          dus: Sequence[DataUnit]) -> float:
-        """Fraction of each (single-manager) DU's partitions actually
-        resident on the pilot's devices. With a TierManager the *measured*
-        residency is used (a DU whose nominal tier is 'device' but whose
-        partitions were demoted under memory pressure earns no device
-        credit); without one we fall back to the DU's single tier field."""
-        hits = 0.0
-        for du in dus:
-            frac = du.resident_fraction("device")
-            if frac <= 0.0:
-                continue
-            tm = getattr(du, "tier_manager", None)
-            be = (tm.backends if tm is not None else du.backends).get("device")
-            mesh = getattr(be, "mesh", None)
-            if mesh is None or pilot.mesh is None:
-                hits += frac  # device-resident, single address space
-            else:
-                pilot_devs = {d.id for d in pilot.mesh.devices.flat}
-                du_devs = {d.id for d in mesh.devices.flat}
-                if du_devs & pilot_devs:
-                    hits += frac
-        return hits
-
-    def score(self, pilot: PilotCompute, cu_desc: ComputeUnitDescription) -> float:
-        s = 0.0
-        shared_dus = []     # DUs scored by global (single-manager) residency
-        for du in cu_desc.input_data:
-            pds = self._per_pilot_du(pilot, du)
-            if pds is not None:
-                # per-pilot replica residency: one registry scan yields the
-                # device, host, and any-tier-stickiness terms together
-                n = du.num_partitions
-                if n:
-                    res = pds.residency(du, pilot.id)
-                    s += W_DEVICE * res.get("device", 0) / n
-                    s += W_HOST * res.get("host", 0) / n
-                    s += W_CKPT * res.get("checkpoint", 0) / n
-                    s += W_LOCAL * sum(res.values()) / n
-            elif getattr(du, "pilot_data_service", None) is None:
-                shared_dus.append(du)
-            # else: replica-managed DU on a pilot outside the data
-            # service — it holds nothing, so no locality credit
-        s += W_DEVICE * self._device_tier_hits(pilot, shared_dus)
-        for du in shared_dus:
-            n = du.num_partitions
-            if n:
-                res = du.residency()    # one scan for both colder terms
-                s += W_HOST * res.get("host", 0) / n
-                s += W_CKPT * res.get("checkpoint", 0) / n
-        if cu_desc.affinity and cu_desc.affinity == pilot.desc.affinity:
-            s += W_AFFINITY
-        s -= W_QUEUE * pilot.utilization
-        return s
-
-    def select_pilot(self, cu_desc: ComputeUnitDescription,
-                     timeout: float = 30.0,
-                     exclude: frozenset = frozenset()) -> PilotCompute:
+    def _select_scored(self, cu_desc: ComputeUnitDescription,
+                       timeout: float = 30.0,
+                       exclude: frozenset = frozenset()
+                       ) -> Tuple[PilotCompute, float]:
+        """Late binding: wait for a healthy pilot, return the best-scoring
+        one AND its score, so the submit path records the decision without
+        scoring the winner a second time (scoring scans every input DU's
+        partitions — the recompute scaled with pilots x DUs x parts)."""
         t0 = time.time()
         while True:
             pilots = [p for p in self.service.healthy_pilots()
                       if p.id not in exclude]
             if pilots:
-                return max(pilots, key=lambda p: self.score(p, cu_desc))
+                return self.policy.select(pilots, cu_desc)
             if time.time() - t0 > timeout:
                 raise TimeoutError("no healthy pilot available (late binding "
                                    "timed out)")
             time.sleep(0.01)
+
+    def select_pilot(self, cu_desc: ComputeUnitDescription,
+                     timeout: float = 30.0,
+                     exclude: frozenset = frozenset()) -> PilotCompute:
+        return self._select_scored(cu_desc, timeout, exclude)[0]
+
+    # ------------------------------------------------------------------
+    def _record(self, cu: ComputeUnit, pilot: PilotCompute,
+                score: float) -> None:
+        """Append one placement decision, keeping `history` bounded and
+        the lifetime counters exact."""
+        self.history.append({"cu": cu.id, "pilot": pilot.id,
+                             "score": score, "t": time.time()})
+        overflow = len(self.history) - self.history_limit
+        if overflow > 0:
+            del self.history[:overflow]
+        with self._stats_lock:
+            self._submitted += 1
+            self._per_pilot[pilot.id] = self._per_pilot.get(pilot.id, 0) + 1
+
+    def stats(self) -> dict:
+        """Lifetime scheduling summary (exact even after the bounded
+        `history` window has rolled over)."""
+        with self._stats_lock:
+            per_pilot = dict(self._per_pilot)
+            submitted = self._submitted
+        return {"policy": self.policy.name, "submitted": submitted,
+                "per_pilot": per_pilot,
+                "history_len": len(self.history),
+                "history_limit": self.history_limit}
 
     def _prefetch_inputs(self, pilot: PilotCompute,
                          cu_desc: ComputeUnitDescription) -> List[Future]:
@@ -205,10 +195,12 @@ class ComputeDataManager:
         and queue its pre-binding stage-in."""
         cu = ComputeUnit(cu_desc)
         if pilot is None:
-            pilot = self.select_pilot(cu_desc, exclude=exclude)
-        self.history.append({"cu": cu.id, "pilot": pilot.id,
-                             "score": self.score(pilot, cu_desc),
-                             "t": time.time()})
+            # the winning score is threaded through from selection — the
+            # old recompute here doubled the hot-path scoring cost
+            pilot, score = self._select_scored(cu_desc, exclude=exclude)
+        else:
+            score = self.policy.score(pilot, cu_desc)
+        self._record(cu, pilot, score)
         cu.prebind_futures = self._prefetch_inputs(pilot, cu_desc)
         pilot.submit_cu(cu)
         return cu

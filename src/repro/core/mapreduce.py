@@ -155,6 +155,10 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
     workers; the legacy path tree-reduces).  prefetch_depth=None sizes the
     pipeline adaptively from measured stage/compute times; an int fixes it.
 
+    `manager` may also be a PilotSession (the v2 façade) — its scheduler
+    is unwrapped, so `map_reduce(du, f, r, manager=session)` and
+    `session.map_reduce(du, f, r)` are the same call.
+
     retries (managed pipelined path): when a group's Compute-Unit fails —
     typically its pilot died mid-run — the group's partitions are re-bound
     onto the surviving pilots and re-run, up to `retries` times.  The new
@@ -163,6 +167,17 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
     pilot failure costs a lazy restore instead of the whole job (0
     disables; partial results from healthy groups are never recomputed).
     """
+    if manager is not None and not isinstance(manager, ComputeDataManager):
+        # a PilotSession (or anything façade-shaped) stands in for its
+        # scheduler; duck-typed to keep session.py the only importer of
+        # the façade layer
+        inner = getattr(manager, "manager", None)
+        if isinstance(inner, ComputeDataManager):
+            manager = inner
+        else:
+            raise TypeError(f"map_reduce: manager must be a "
+                            f"ComputeDataManager or PilotSession, got "
+                            f"{type(manager).__name__}")
     if du.tier == "device":
         return _map_reduce_device(du, map_fn, reduce_fn, pilot, extra_args,
                                   jit_map, prefetch_depth, pipeline)

@@ -132,6 +132,12 @@ class FileBackend(StorageBackend):
         self.profile.charge(arr.nbytes, write=False)
         return arr
 
+    def nbytes(self, name: str) -> int:
+        # header-only read: sizing a partition (e.g. for interconnect cost
+        # modelling) must not charge the simulated bandwidth profile
+        arr = np.load(self._path(name), mmap_mode="r")
+        return int(arr.nbytes)
+
     def delete(self, name: str) -> None:
         self._path(name).unlink(missing_ok=True)
 

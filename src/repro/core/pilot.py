@@ -22,8 +22,9 @@ import jax
 import numpy as np
 
 
-# upper bound on waiting for one pre-binding stage-in before running the CU
-# against wherever the data currently lives
+# default upper bound on waiting for one pre-binding stage-in before running
+# the CU against wherever the data currently lives; per-pilot override via
+# PilotComputeDescription(prebind_wait_s=...) / PilotSession(prebind_wait_s=.)
 _PREBIND_WAIT_S = 120.0
 
 
@@ -36,30 +37,177 @@ class State(str, enum.Enum):
     CANCELED = "Canceled"
 
 
+_EVICTION_POLICIES = ("lru", "gdsf")
+
+
 @dataclasses.dataclass(frozen=True)
-class PilotComputeDescription:
-    """What to allocate (the paper's resource description)."""
-    backend: str = "inprocess"       # inprocess | simulated  (adaptor name)
-    num_devices: int = 1
-    mesh_axes: Tuple[str, ...] = ("data",)
-    mesh_shape: Tuple[int, ...] = ()
-    memory_gb: float = 0.0           # YARN-style memory ask: becomes the
-    #                                  pilot TierManager's device-tier budget
-    host_memory_gb: float = 0.0      # optional host-tier budget for the
-    #                                  pilot's TierManager (0 = unbounded)
-    checkpoint_dir: str = ""         # durable checkpoint tier beneath the
-    #                                  volatile budgets; pilots naming the
-    #                                  same dir share ONE persistent store
-    #                                  (the recovery home after pilot loss)
-    checkpoint_gb: float = 0.0       # optional checkpoint budget (0 = inf)
+class MemoryDescription:
+    """The pilot's retained-memory ask (one TierManager's worth).
+
+    `memory_gb` is the YARN-style device-tier (HBM) budget — 0 means the
+    pilot gets no managed hierarchy at all; `host_memory_gb` optionally
+    bounds the host tier (0 = unbounded).  The remaining knobs tune the
+    TierManager built from the ask.
+    """
+    memory_gb: float = 0.0           # device-tier budget (0 = unmanaged)
+    host_memory_gb: float = 0.0      # host-tier budget (0 = unbounded)
     eviction_policy: str = "lru"     # "lru" | "gdsf" for the pilot's tiers
     hysteresis: int = 0              # eviction ping-pong damping (clock ticks)
     stager_workers: int = 2          # TierManager stager pool width (the
     #                                  depth-k pipeline needs >= depth)
+
+    def __post_init__(self):
+        if self.memory_gb < 0 or self.host_memory_gb < 0:
+            raise ValueError(
+                f"MemoryDescription: memory_gb/host_memory_gb must be >= 0 "
+                f"(got {self.memory_gb}/{self.host_memory_gb})")
+        if self.eviction_policy not in _EVICTION_POLICIES:
+            raise ValueError(
+                f"MemoryDescription: eviction_policy must be one of "
+                f"{_EVICTION_POLICIES}, got {self.eviction_policy!r}")
+        if self.hysteresis < 0:
+            raise ValueError("MemoryDescription: hysteresis must be >= 0, "
+                             f"got {self.hysteresis}")
+        if self.stager_workers < 1:
+            raise ValueError("MemoryDescription: stager_workers must be "
+                             f">= 1, got {self.stager_workers}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilityDescription:
+    """The pilot's durable spill/recovery ask.
+
+    `checkpoint_dir` adds the persistent checkpoint tier beneath the
+    volatile budgets; pilots naming the same directory share ONE store
+    (the recovery home after pilot loss).  `checkpoint_gb` optionally
+    bounds it (0 = unbounded) and is meaningless without a directory.
+    """
+    checkpoint_dir: str = ""
+    checkpoint_gb: float = 0.0
+
+    def __post_init__(self):
+        if self.checkpoint_gb < 0:
+            raise ValueError("DurabilityDescription: checkpoint_gb must be "
+                             f">= 0, got {self.checkpoint_gb}")
+        if self.checkpoint_gb and not self.checkpoint_dir:
+            raise ValueError(
+                "DurabilityDescription: checkpoint_gb was set but "
+                "checkpoint_dir is empty — a budget needs a directory to "
+                "bound")
+
+
+_MEMORY_FIELDS = tuple(f.name for f in dataclasses.fields(MemoryDescription))
+_DURABILITY_FIELDS = tuple(f.name
+                           for f in dataclasses.fields(DurabilityDescription))
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class PilotComputeDescription:
+    """What to allocate (the paper's resource description), composed from
+    nested sub-descriptions:
+
+        PilotComputeDescription(
+            backend="inprocess", num_devices=1,
+            memory=MemoryDescription(memory_gb=0.5, eviction_policy="gdsf"),
+            durability=DurabilityDescription(checkpoint_dir="/ckpt"))
+
+    The flat legacy spelling (``memory_gb=0.5``, ``checkpoint_dir=...`` as
+    direct kwargs) is still accepted — the compat constructor folds flat
+    fields into the nested dataclasses, and read access to the flat names
+    keeps working through properties — so descriptions written against
+    the v1 API run unchanged.  Mixing a nested block with one of its flat
+    fields is an error (ambiguous), as is any unknown kwarg.
+    """
+    backend: str = "inprocess"       # inprocess | simulated  (adaptor name)
+    num_devices: int = 1
+    mesh_axes: Tuple[str, ...] = ("data",)
+    mesh_shape: Tuple[int, ...] = ()
+    memory: MemoryDescription = MemoryDescription()
+    durability: DurabilityDescription = DurabilityDescription()
     affinity: str = ""               # locality label
     queue_depth: int = 1024
     # simulated-backend knobs (provisioning latency per paper Fig. 6)
     startup_seconds: float = 0.0
+    # upper bound on waiting for ONE pre-binding stage-in future before the
+    # CU runs against wherever the data currently lives (scheduler config;
+    # a stuck stage must delay a CU, never wedge it)
+    prebind_wait_s: float = _PREBIND_WAIT_S
+
+    def __init__(self, backend: str = "inprocess", num_devices: int = 1,
+                 mesh_axes: Tuple[str, ...] = ("data",),
+                 mesh_shape: Tuple[int, ...] = (),
+                 memory: Optional[MemoryDescription] = None,
+                 durability: Optional[DurabilityDescription] = None,
+                 affinity: str = "", queue_depth: int = 1024,
+                 startup_seconds: float = 0.0,
+                 prebind_wait_s: float = _PREBIND_WAIT_S,
+                 **legacy):
+        unknown = set(legacy) - set(_MEMORY_FIELDS) - set(_DURABILITY_FIELDS)
+        if unknown:
+            raise TypeError(
+                f"PilotComputeDescription: unknown field(s) "
+                f"{sorted(unknown)}; valid flat legacy fields are "
+                f"{sorted(_MEMORY_FIELDS + _DURABILITY_FIELDS)}")
+        mem_kw = {k: v for k, v in legacy.items() if k in _MEMORY_FIELDS}
+        dur_kw = {k: v for k, v in legacy.items() if k in _DURABILITY_FIELDS}
+        if memory is None:
+            memory = MemoryDescription(**mem_kw)
+        elif mem_kw:
+            raise ValueError(
+                f"PilotComputeDescription: got both memory= and flat "
+                f"field(s) {sorted(mem_kw)} — pass one spelling, not both")
+        if durability is None:
+            durability = DurabilityDescription(**dur_kw)
+        elif dur_kw:
+            raise ValueError(
+                f"PilotComputeDescription: got both durability= and flat "
+                f"field(s) {sorted(dur_kw)} — pass one spelling, not both")
+        if num_devices < 1:
+            raise ValueError("PilotComputeDescription: num_devices must be "
+                             f">= 1, got {num_devices}")
+        if queue_depth < 1:
+            raise ValueError("PilotComputeDescription: queue_depth must be "
+                             f">= 1, got {queue_depth}")
+        if prebind_wait_s <= 0:
+            raise ValueError("PilotComputeDescription: prebind_wait_s must "
+                             f"be > 0, got {prebind_wait_s}")
+        for k, v in (("backend", backend), ("num_devices", num_devices),
+                     ("mesh_axes", tuple(mesh_axes)),
+                     ("mesh_shape", tuple(mesh_shape)), ("memory", memory),
+                     ("durability", durability), ("affinity", affinity),
+                     ("queue_depth", queue_depth),
+                     ("startup_seconds", startup_seconds),
+                     ("prebind_wait_s", prebind_wait_s)):
+            object.__setattr__(self, k, v)
+
+    # -- flat legacy read access (v1 compat) ----------------------------
+    @property
+    def memory_gb(self) -> float:
+        return self.memory.memory_gb
+
+    @property
+    def host_memory_gb(self) -> float:
+        return self.memory.host_memory_gb
+
+    @property
+    def eviction_policy(self) -> str:
+        return self.memory.eviction_policy
+
+    @property
+    def hysteresis(self) -> int:
+        return self.memory.hysteresis
+
+    @property
+    def stager_workers(self) -> int:
+        return self.memory.stager_workers
+
+    @property
+    def checkpoint_dir(self) -> str:
+        return self.durability.checkpoint_dir
+
+    @property
+    def checkpoint_gb(self) -> float:
+        return self.durability.checkpoint_gb
 
 
 @dataclasses.dataclass
@@ -150,10 +298,14 @@ class PilotCompute:
             # pre-binding stage-in: the copies toward this pilot's tiers
             # were queued at bind time and overlapped the queue wait; they
             # must LAND before the CU body runs (refused/raced stages
-            # resolve without raising — reads then pull through instead)
+            # resolve without raising — reads then pull through instead).
+            # The wait is bounded per future by the pilot's configured
+            # prebind_wait_s, so a wedged stager delays the CU, never
+            # hangs it.
+            wait_s = getattr(self.desc, "prebind_wait_s", _PREBIND_WAIT_S)
             for f in cu.prebind_futures:
                 try:
-                    f.result(timeout=_PREBIND_WAIT_S)
+                    f.result(timeout=wait_s)
                 except Exception:   # noqa: BLE001
                     pass
             # optional stage-in (cache promotion): off by default so cold

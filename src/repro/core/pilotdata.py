@@ -21,6 +21,15 @@ per-pilot fact rather than one shared pool:
     value after a write completes (the follow-on two-level-storage paper,
     arXiv:1508.01847, motivates exactly this replicated node-local store).
 
+Cross-pilot replica reads (`interconnect=` / `attach_interconnect`): with
+a cost model attached (repro.core.scheduling.InterconnectModel — per-link
+GB/s + latency between pilots, plus the home re-pull path), the fetch
+path prices every way of sourcing a partition and takes the cheapest: a
+CU bound to pilot A reads from sibling pilot B's replica over the
+modelled link exactly when that beats re-pulling from the home store
+(the checkpoint home stays the unpriced last resort).  Without a model
+the home-first order is preserved bit-for-bit.
+
 Capacity stays per-pilot: a replica landing in a full pilot demotes that
 pilot's own data through *its* hierarchy (device -> host -> file), or is
 refused outright when it cannot fit anywhere in the pilot — replication
@@ -68,7 +77,8 @@ class PilotDataService:
     """
 
     def __init__(self, max_workers: int = 4,
-                 checkpoint_dir: Optional[str] = None):
+                 checkpoint_dir: Optional[str] = None,
+                 interconnect=None):
         self._managers: Dict[str, TierManager] = {}   # pilot id -> manager
         self._replicas: Dict[str, Set[str]] = {}      # key -> pilot ids
         self._lock = threading.Lock()                 # registry metadata
@@ -80,7 +90,14 @@ class PilotDataService:
         self.events: List[dict] = []
         self.counters: Dict[str, int] = {
             "replications": 0, "pulls": 0, "invalidations": 0,
-            "replicate_refused": 0, "checkpoint_restores": 0, "persists": 0}
+            "replicate_refused": 0, "checkpoint_restores": 0, "persists": 0,
+            "sibling_reads": 0, "home_reads": 0}
+        # cost-modelled cross-pilot reads (repro.core.scheduling.
+        # InterconnectModel): with a model attached, _fetch sources a
+        # partition from the CHEAPEST modelled path — a sibling pilot's
+        # replica over its link, or a home re-pull — instead of always
+        # going home first.  None preserves the home-first PR 3 order.
+        self.interconnect = interconnect
         # the shared durable home (see module docstring); per-directory
         # shared instance, so pilots spilling to the same dir and this
         # service recover from ONE consistent store.  The service never
@@ -95,6 +112,12 @@ class PilotDataService:
         """Use an existing (possibly shared) checkpoint store as the
         durable home; the caller keeps ownership of its lifecycle."""
         self.checkpoint_store = store
+        return self
+
+    def attach_interconnect(self, model) -> "PilotDataService":
+        """Enable cost-modelled cross-pilot replica reads (see
+        repro.core.scheduling.InterconnectModel)."""
+        self.interconnect = model
         return self
 
     # -- membership ------------------------------------------------------
@@ -246,7 +269,7 @@ class PilotDataService:
                     except CapacityError:
                         pass
                 return tm.tier_of(key) or tier
-            val = self._fetch(du, i, exclude=pilot_id)
+            val = self._fetch(du, i, exclude=pilot_id, dest=pilot_id)
             dst = tier if tier in tm.backends else tm.order[-1]
             try:
                 tm.put(key, np.asarray(val), dst)
@@ -333,7 +356,7 @@ class PilotDataService:
             # the full fetch chain (home, live replicas, checkpoint home)
             with self._lock:
                 self.counters["pulls"] += 1
-            val = self._fetch(du, i)
+            val = self._fetch(du, i, dest=pilot_id)
             if device:
                 import jax
                 return jax.device_put(np.asarray(val))
@@ -343,26 +366,85 @@ class PilotDataService:
             # raises KeyError if the partition is truly gone)
             return du.partition_device(i) if device else du.partition(i)
 
-    def _fetch(self, du, i: int, exclude: Optional[str] = None):
-        """Source a partition's bytes: home placement first, then any other
-        replica holder, then the durable checkpoint home (survives a
-        released home tier AND pilot loss — this is the recovery path a
-        retried CU restores through)."""
+    def partition_nbytes(self, du, i: int) -> int:
+        """Best-effort partition size for cost modelling: replica-holder
+        metadata first (an in-memory dict read), then the home placement
+        (FileBackend answers from the .npy header, so a throttled home
+        profile is NOT charged just to price a transfer).  0 when nobody
+        can say — the cost comparison then reduces to the links' fixed
+        latencies."""
         key = du._key(i)
-        try:
-            return du.partition(i)
-        except (KeyError, FileNotFoundError):
-            pass
         for pid in self.holders(key):
-            if pid == exclude:
-                continue
             tm = self._managers.get(pid)
             if tm is None:
                 continue
             try:
-                return tm.get(key)
+                n = tm.entry_nbytes(key)
+            except KeyError:
+                continue
+            if n:
+                return int(n)
+        try:
+            return int(du.partition_nbytes(i))
+        except (KeyError, FileNotFoundError, AttributeError):
+            return 0
+
+    def _fetch(self, du, i: int, exclude: Optional[str] = None,
+               dest: Optional[str] = None):
+        """Source a partition's bytes for `dest` (the pilot pulling it).
+
+        Without an InterconnectModel (or without a destination pilot) the
+        PR 3 order applies: home placement first, then any other replica
+        holder, then the durable checkpoint home (survives a released
+        home tier AND pilot loss — the recovery path a retried CU
+        restores through).
+
+        With a model attached, the home re-pull and every sibling replica
+        are priced (link bandwidth + latency x partition size) and tried
+        cheapest-first — the ROADMAP's cross-pilot replica read: a CU
+        bound to pilot A reads from sibling pilot B's memory exactly when
+        the modelled link beats going back to the home store.  Ties break
+        toward home (the historical order); the checkpoint store stays
+        the unpriced last resort either way."""
+        key = du._key(i)
+        ic = self.interconnect
+        sibs = [pid for pid in self.holders(key)
+                if pid != exclude and pid != dest]
+        # (modelled cost, tiebreak, source pilot or None=home)
+        if ic is not None and dest is not None and sibs:
+            nbytes = self.partition_nbytes(du, i)
+            plan = [(ic.home_cost(nbytes), 0, None)]
+            plan += [(ic.transfer_cost(pid, dest, nbytes), 1, pid)
+                     for pid in sibs]
+            plan.sort(key=lambda c: (c[0], c[1]))
+            costed = True
+        else:
+            plan = [(0.0, 0, None)] + [(0.0, 1, pid) for pid in sibs]
+            costed = False
+        for cost, _, pid in plan:
+            if pid is None:
+                try:
+                    val = du.partition(i)
+                except (KeyError, FileNotFoundError):
+                    continue
+                if costed:
+                    with self._lock:
+                        self.counters["home_reads"] += 1
+                return val
+            tm = self._managers.get(pid)
+            if tm is None:
+                continue
+            try:
+                val = tm.get(key)
             except (KeyError, FileNotFoundError):
                 continue
+            if costed:
+                ic.charge(pid, dest, int(np.asarray(val).nbytes))
+                with self._lock:
+                    self.counters["sibling_reads"] += 1
+                self.events.append({"op": "sibling-read", "key": key,
+                                    "src": pid, "dst": dest, "cost": cost})
+            return val
         store = self.checkpoint_store
         if store is not None:
             try:

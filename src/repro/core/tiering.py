@@ -947,16 +947,25 @@ def tier_manager_for_pilot(desc, mesh=None) -> Optional[TierManager]:
     pilot spills its coldest partitions there under pressure instead of
     refusing, restores lazily on read, and — because the store is shared
     per directory — pilots naming the same dir form one persistent home
-    the PilotDataService can recover replicas from after a pilot dies."""
-    if not getattr(desc, "memory_gb", 0):
+    the PilotDataService can recover replicas from after a pilot dies.
+
+    Accepts the v2 composed description (reads its `memory`/`durability`
+    blocks) or any object carrying the flat legacy fields."""
+    mem = getattr(desc, "memory", None)
+    if mem is None:
+        mem = desc                      # flat legacy / duck-typed object
+    dur = getattr(desc, "durability", None)
+    if dur is None:
+        dur = desc
+    if not getattr(mem, "memory_gb", 0):
         return None
-    ckpt_dir = getattr(desc, "checkpoint_dir", "") or None
-    ckpt_gb = getattr(desc, "checkpoint_gb", 0.0)
+    ckpt_dir = getattr(dur, "checkpoint_dir", "") or None
+    ckpt_gb = getattr(dur, "checkpoint_gb", 0.0)
     return make_tier_manager(
-        device_budget=int(desc.memory_gb * 2 ** 30),
-        host_budget=(int(desc.host_memory_gb * 2 ** 30)
-                     if desc.host_memory_gb else None),
-        mesh=mesh, policy=desc.eviction_policy,
-        hysteresis=desc.hysteresis, max_workers=desc.stager_workers,
+        device_budget=int(mem.memory_gb * 2 ** 30),
+        host_budget=(int(mem.host_memory_gb * 2 ** 30)
+                     if mem.host_memory_gb else None),
+        mesh=mesh, policy=mem.eviction_policy,
+        hysteresis=mem.hysteresis, max_workers=mem.stager_workers,
         checkpoint_root=ckpt_dir,
         checkpoint_budget=(int(ckpt_gb * 2 ** 30) if ckpt_gb else None))

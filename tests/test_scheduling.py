@@ -1,0 +1,256 @@
+"""Pluggable scheduling (repro.core.scheduling): LocalityPolicy parity
+with the historical W_* constants (exact arithmetic), custom weights,
+select() threading the winning score, the InterconnectModel cost math,
+and cost-modelled cross-pilot replica reads (sibling fetch chosen iff
+the modelled link beats the home re-pull)."""
+import numpy as np
+import pytest
+
+from repro.core import (ComputeDataManager, ComputeUnitDescription, DataUnit,
+                        InterconnectModel, Link, LocalityPolicy,
+                        LocalityWeights, PilotComputeDescription,
+                        PilotComputeService, PilotDataService, TierManager,
+                        make_backend)
+from repro.core.manager import (W_AFFINITY, W_CKPT, W_DEVICE, W_HOST,
+                                W_LOCAL, W_QUEUE)
+
+
+@pytest.fixture
+def service():
+    svc = PilotComputeService()
+    yield svc
+    svc.cancel_all()
+
+
+def _managed_du(name, device_budget, parts=4):
+    tm = TierManager({"host": make_backend("host"),
+                      "device": make_backend("device")},
+                     {"device": device_budget}, promote_threshold=0)
+    arr = np.ones((parts * 256, 4), np.float32)
+    return DataUnit.from_array(name, arr, parts, tm.backends, tier="device",
+                               tier_manager=tm)
+
+
+def _home_du(name, parts=4, rows=64):
+    arr = np.arange(parts * rows * 4, dtype=np.float32).reshape(-1, 4)
+    return DataUnit.from_array(name, arr, parts,
+                               {"host": make_backend("host")}, tier="host")
+
+
+def _pds_pilot(svc, pds, device_budget=None):
+    pilot = svc.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    pilot.attach_tier_manager(TierManager(
+        {"host": make_backend("host"), "device": make_backend("device")},
+        {"device": device_budget}, promote_threshold=0))
+    pds.register_pilot(pilot)
+    return pilot
+
+
+# -- LocalityPolicy parity ----------------------------------------------
+def test_locality_policy_matches_legacy_constants_exactly(service):
+    """The extracted policy must reproduce the historical W_* scoring
+    bit-for-bit: every term hand-computed from the published formula."""
+    pilot = service.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    policy = LocalityPolicy()
+    part_bytes = 256 * 4 * 4
+
+    # fully device-resident unmanaged-hierarchy DU: W_DEVICE * 1.0
+    du_dev = _managed_du("full", device_budget=None)
+    s = policy.score(pilot, ComputeUnitDescription(fn=lambda: 0,
+                                                   input_data=(du_dev,)))
+    assert s == W_DEVICE * 1.0 - W_QUEUE * pilot.utilization
+
+    # half-demoted DU: W_DEVICE * 2/4 + W_HOST * 2/4
+    du_half = _managed_du("half", device_budget=2 * part_bytes)
+    assert du_half.resident_fraction("device") == 0.5
+    s = policy.score(pilot, ComputeUnitDescription(fn=lambda: 0,
+                                                   input_data=(du_half,)))
+    assert s == W_DEVICE * 0.5 + W_HOST * 0.5 - W_QUEUE * pilot.utilization
+
+    # all-host DU + matching affinity label
+    du_host = _home_du("hosted")
+    s = policy.score(pilot, ComputeUnitDescription(
+        fn=lambda: 0, input_data=(du_host,), affinity="x"))
+    assert s == W_HOST * 1.0 - W_QUEUE * pilot.utilization  # label mismatch
+    pilot_aff = service.submit_pilot(PilotComputeDescription(
+        backend="inprocess", affinity="x"))
+    s = policy.score(pilot_aff, ComputeUnitDescription(
+        fn=lambda: 0, input_data=(du_host,), affinity="x"))
+    assert s == W_HOST * 1.0 + W_AFFINITY - W_QUEUE * pilot_aff.utilization
+
+
+def test_locality_policy_replica_terms_match_legacy(service):
+    """Per-pilot replica scoring: device/host/checkpoint/any-tier terms
+    hand-computed against the registry residency."""
+    pds = PilotDataService()
+    a = _pds_pilot(service, pds)
+    b = _pds_pilot(service, pds)
+    du = pds.register(_home_du("rep", parts=4))
+    du.replicate_to_pilot(a, parts=[0, 1, 2])       # 3 on-device replicas
+    du.replicate_to_pilot(b, parts=[3], tier="host")
+    policy = LocalityPolicy()
+    desc = ComputeUnitDescription(fn=lambda: 0, input_data=(du,))
+    sa, sb = policy.score(a, desc), policy.score(b, desc)
+    assert sa == (W_DEVICE * 3 / 4 + W_LOCAL * 3 / 4
+                  - W_QUEUE * a.utilization)
+    assert sb == (W_HOST * 1 / 4 + W_LOCAL * 1 / 4
+                  - W_QUEUE * b.utilization)
+    # and the manager's default policy scores identically
+    manager = ComputeDataManager(service)
+    assert manager.score(a, desc) == sa
+    assert manager.score(b, desc) == sb
+    pds.close()
+
+
+def test_custom_weights_change_placement(service):
+    """Non-default weights are honored — the whole point of the strategy
+    extraction (host-heavy weights flip the ranking)."""
+    pds = PilotDataService()
+    a = _pds_pilot(service, pds)
+    b = _pds_pilot(service, pds)
+    du = pds.register(_home_du("w", parts=4))
+    du.replicate_to_pilot(a, parts=[0])                    # 1 device part
+    du.replicate_to_pilot(b, parts=[1, 2, 3], tier="host")  # 3 host parts
+    desc = ComputeUnitDescription(fn=lambda: 0, input_data=(du,))
+    default = LocalityPolicy()
+    assert default.score(a, desc) > default.score(b, desc)
+    host_heavy = LocalityPolicy(LocalityWeights(device=1.0, host=100.0))
+    assert host_heavy.score(b, desc) > host_heavy.score(a, desc)
+    pds.close()
+
+
+def test_select_returns_first_max_and_score(service):
+    ps = [service.submit_pilot(PilotComputeDescription(backend="inprocess"))
+          for _ in range(3)]
+    policy = LocalityPolicy()
+    desc = ComputeUnitDescription(fn=lambda: 0)
+    best, score = policy.select(ps, desc)
+    assert best is ps[0]                # ties resolve to the first pilot
+    assert score == policy.score(ps[0], desc)
+    with pytest.raises(ValueError):
+        policy.select([], desc)
+
+
+def test_submit_scores_each_pilot_exactly_once(service):
+    """The old submit path re-scored the winner for `history` right after
+    select_pilot's max() had already scored it — the winning score must be
+    threaded through instead (hot-path cost ~ pilots x DUs x parts)."""
+
+    class CountingPolicy(LocalityPolicy):
+        def __init__(self):
+            super().__init__()
+            self.calls = 0
+
+        def score(self, pilot, cu_desc):
+            self.calls += 1
+            return super().score(pilot, cu_desc)
+
+    for _ in range(3):
+        service.submit_pilot(PilotComputeDescription(backend="inprocess"))
+    policy = CountingPolicy()
+    manager = ComputeDataManager(service, policy=policy)
+    cu = manager.submit(ComputeUnitDescription(fn=lambda: "ok"))
+    assert cu.result(30) == "ok"
+    assert policy.calls == 3            # once per pilot, zero recomputes
+    assert manager.history[-1]["score"] == max(
+        LocalityPolicy().score(p, ComputeUnitDescription(fn=lambda: "ok"))
+        for p in service.healthy_pilots())
+
+
+# -- InterconnectModel ---------------------------------------------------
+def test_link_cost_math_and_validation():
+    link = Link(gbps=1.0, latency_s=0.5)
+    assert link.cost(10 ** 9) == pytest.approx(1.5)   # 1 GB at 1 GB/s + lat
+    assert Link(gbps=0.0).cost(1) == float("inf")
+    with pytest.raises(ValueError):
+        Link(gbps=-1.0)
+
+
+def test_interconnect_links_and_home():
+    ic = InterconnectModel(default=Link(gbps=10.0),
+                           home=Link(gbps=1.0, latency_s=0.1))
+    ic.set_link("a", "b", gbps=100.0, latency_s=0.0)
+    nb = 10 ** 9
+    assert ic.transfer_cost("a", "b", nb) == pytest.approx(nb / 100e9)
+    assert ic.transfer_cost("b", "a", nb) == pytest.approx(nb / 100e9)
+    assert ic.transfer_cost("a", "c", nb) == pytest.approx(nb / 10e9)
+    assert ic.transfer_cost("a", "a", nb) == 0.0
+    assert ic.home_cost(nb) == pytest.approx(0.1 + 1.0)
+
+
+def test_sibling_fetch_chosen_iff_link_beats_home(service):
+    """The ROADMAP item: a CU's pull into pilot B reads from sibling A's
+    replica exactly when the modelled link cost beats a home re-pull."""
+    # fast fabric, slow home: the sibling must serve the pull
+    fast_fabric = InterconnectModel(default=Link(gbps=100.0),
+                                    home=Link(gbps=0.001, latency_s=0.05))
+    pds = PilotDataService(interconnect=fast_fabric)
+    a, b = _pds_pilot(service, pds), _pds_pilot(service, pds)
+    du = pds.register(_home_du("fab", parts=2))
+    du.replicate_to_pilot(a, parts=[0])
+    ref = np.asarray(du.partition(0)).copy()
+    np.testing.assert_array_equal(du.partition(0, pilot=b), ref)
+    assert pds.counters["sibling_reads"] == 1
+    assert pds.counters["home_reads"] == 0
+    assert any(e["op"] == "sibling-read" and e["src"] == a.id
+               and e["dst"] == b.id for e in pds.events)
+    pds.close()
+
+    # slow fabric, fast home: the home re-pull must win
+    slow_fabric = InterconnectModel(default=Link(gbps=0.0001, latency_s=0.5),
+                                    home=Link(gbps=100.0))
+    pds2 = PilotDataService(interconnect=slow_fabric)
+    c, d = _pds_pilot(service, pds2), _pds_pilot(service, pds2)
+    du2 = pds2.register(_home_du("slo", parts=2))
+    du2.replicate_to_pilot(c, parts=[0])
+    np.testing.assert_array_equal(du2.partition(0, pilot=d),
+                                  np.asarray(du2.partition(0)))
+    assert pds2.counters["home_reads"] >= 1
+    assert pds2.counters["sibling_reads"] == 0
+    pds2.close()
+
+
+def test_sibling_fetch_recovers_when_home_is_gone(service):
+    """Cost order never breaks the fallback chain: with the home copy
+    deleted out from under the registry, a 'cheap home' model still ends
+    up serving from the sibling replica."""
+    ic = InterconnectModel(default=Link(gbps=0.001, latency_s=0.5),
+                           home=Link(gbps=100.0))
+    pds = PilotDataService(interconnect=ic)
+    a, b = _pds_pilot(service, pds), _pds_pilot(service, pds)
+    du = pds.register(_home_du("gone", parts=1))
+    ref = np.asarray(du.partition(0)).copy()
+    du.replicate_to_pilot(a, parts=[0])
+    # rip out the home copy directly (not du.delete(): that would
+    # coherently invalidate the replicas too)
+    du.backends["host"].delete(du._key(0))
+    np.testing.assert_array_equal(du.partition(0, pilot=b), ref)
+    assert pds.counters["sibling_reads"] == 1
+    pds.close()
+
+
+def test_policy_sibling_credit_requires_interconnect(service):
+    """A pilot holding nothing earns sibling credit only when a policy
+    carries an interconnect whose link beats home — and never more than a
+    pilot actually holding the bytes."""
+    pds = PilotDataService()
+    a, b = _pds_pilot(service, pds), _pds_pilot(service, pds)
+    du = pds.register(_home_du("cred", parts=4))
+    du.replicate_to_pilot(a)            # a holds everything, b nothing
+    desc = ComputeUnitDescription(fn=lambda: 0, input_data=(du,))
+    plain = LocalityPolicy()
+    fabric = LocalityPolicy(interconnect=InterconnectModel(
+        default=Link(gbps=100.0), home=Link(gbps=0.001, latency_s=0.05)))
+    assert plain.score(b, desc) == 0.0 - W_QUEUE * b.utilization
+    assert fabric.score(b, desc) > plain.score(b, desc)   # credit exists
+    assert fabric.score(a, desc) > fabric.score(b, desc)  # holder still wins
+    # credit covers only MISSING partitions: a pilot holding everything
+    # earns pure residency (identical with and without the interconnect)
+    assert fabric.score(a, desc) == plain.score(a, desc)
+    # a partial holder is credited for the unheld remainder only, never
+    # more than one sibling weight per missing partition
+    du.replicate_to_pilot(b, parts=[0])
+    gap = fabric.score(b, desc) - plain.score(b, desc)
+    from repro.core.scheduling import W_SIBLING
+    assert 0.0 < gap <= W_SIBLING * 3 / 4 + 1e-9
+    pds.close()

@@ -1,0 +1,222 @@
+"""Pilot-API v2: the PilotSession façade (lifecycle + teardown), the
+composed resource descriptions (validation + flat-legacy compat), the
+legacy-vs-session parity suite, the bounded scheduler history, and the
+configurable pre-binding wait bound."""
+import time
+from concurrent.futures import Future
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputeDataManager, ComputeUnit,
+                        ComputeUnitDescription, DataUnit,
+                        DurabilityDescription, MemoryDescription,
+                        PilotComputeDescription, PilotComputeService,
+                        PilotDataService, PilotSession, State, kmeans,
+                        make_backend, make_blobs, map_reduce)
+
+import jax.numpy as jnp
+
+
+# -- composed resource descriptions -------------------------------------
+def test_description_flat_and_nested_spellings_are_equal():
+    flat = PilotComputeDescription(
+        backend="inprocess", memory_gb=0.125, host_memory_gb=0.25,
+        eviction_policy="gdsf", hysteresis=2, stager_workers=3,
+        checkpoint_dir="/tmp/ck", checkpoint_gb=1.0)
+    nested = PilotComputeDescription(
+        backend="inprocess",
+        memory=MemoryDescription(memory_gb=0.125, host_memory_gb=0.25,
+                                 eviction_policy="gdsf", hysteresis=2,
+                                 stager_workers=3),
+        durability=DurabilityDescription(checkpoint_dir="/tmp/ck",
+                                         checkpoint_gb=1.0))
+    assert flat == nested
+    # flat read access keeps working through the compat properties
+    assert nested.memory_gb == 0.125
+    assert nested.host_memory_gb == 0.25
+    assert nested.eviction_policy == "gdsf"
+    assert nested.checkpoint_dir == "/tmp/ck"
+    assert nested.checkpoint_gb == 1.0
+
+
+@pytest.mark.parametrize("bad_kwargs, exc", [
+    (dict(memory_gb=-0.5), ValueError),
+    (dict(host_memory_gb=-1), ValueError),
+    (dict(eviction_policy="fifo"), ValueError),
+    (dict(hysteresis=-1), ValueError),
+    (dict(stager_workers=0), ValueError),
+    (dict(checkpoint_gb=1.0), ValueError),          # budget without a dir
+    (dict(num_devices=0), ValueError),
+    (dict(queue_depth=0), ValueError),
+    (dict(prebind_wait_s=0.0), ValueError),
+    (dict(totally_bogus=1), TypeError),             # unknown field
+    (dict(memory=MemoryDescription(), memory_gb=1.0), ValueError),  # both
+    (dict(durability=DurabilityDescription(),
+          checkpoint_dir="/x"), ValueError),
+])
+def test_description_validation_rejects_bad_asks(bad_kwargs, exc):
+    with pytest.raises(exc):
+        PilotComputeDescription(**bad_kwargs)
+
+
+# -- session lifecycle ---------------------------------------------------
+def test_session_teardown_is_deterministic_and_idempotent():
+    with PilotSession() as s:
+        pilots = s.add_pilots(2, memory_gb=0.02)
+        du = s.data("x", np.ones((64, 4), np.float32), parts=2)
+        assert s.map_reduce(du, lambda p: jnp.sum(p),
+                            lambda a, b: a + b) == 64 * 4
+    assert s.closed
+    # pilots released: service emptied, workers stopped, managers closed
+    assert s.compute.pilots == {}
+    for p in pilots:
+        assert p.state in (State.DONE, State.CANCELED)
+        assert p.tier_manager._closed
+    # data service shut down (replicator pool refuses new work)
+    assert s.data_service.replicate_async(du, 0, pilots[0].id).result() is None
+    # closed sessions refuse new pilots/data, and close() is idempotent
+    with pytest.raises(RuntimeError):
+        s.add_pilot(memory_gb=0.01)
+    with pytest.raises(RuntimeError):
+        s.data("y", np.ones(4), parts=1)
+    s.close()
+
+
+def test_session_data_names_are_unique_and_tiers_checked():
+    with PilotSession() as s:
+        s.data("dup", np.ones((8, 2), np.float32), parts=2)
+        with pytest.raises(ValueError):
+            s.data("dup", np.zeros((8, 2), np.float32), parts=2)
+        with pytest.raises(ValueError):
+            s.data("odd", np.ones(4), parts=1, tier="warp")
+        assert s.get_data("dup").num_partitions == 2
+
+
+def test_session_add_pilot_rejects_desc_plus_kwargs():
+    with PilotSession() as s:
+        with pytest.raises(TypeError):
+            s.add_pilot(PilotComputeDescription(), memory_gb=0.5)
+
+
+def test_session_file_tier_home_in_scratch_dir():
+    with PilotSession() as s:
+        du = s.data("filed", np.arange(32, dtype=np.float32).reshape(-1, 4),
+                    parts=2, tier="file")
+        assert du.tier == "file"
+        np.testing.assert_array_equal(
+            np.asarray(du.partition(0)).ravel(), np.arange(16))
+        scratch = s._scratch
+        assert scratch is not None and Path(scratch).exists()
+    # teardown removes the session-owned scratch dir (no /tmp leak)
+    assert not Path(scratch).exists()
+
+
+# -- legacy-vs-session parity -------------------------------------------
+def _legacy_multipilot_kmeans(pts, parts, k, iters):
+    svc = PilotComputeService()
+    pds = PilotDataService()
+    manager = ComputeDataManager(svc)
+    try:
+        pilots = [svc.submit_pilot(PilotComputeDescription(
+            backend="inprocess", memory_gb=0.05)) for _ in range(2)]
+        for p in pilots:
+            pds.register_pilot(p)
+        du = pds.register(DataUnit.from_array(
+            "pts", pts, parts, {"host": make_backend("host")}, tier="host"))
+        du.replicate_to_pilot(pilots[0], parts=range(0, parts // 2))
+        du.replicate_to_pilot(pilots[1], parts=range(parts // 2, parts))
+        res = kmeans(du, k=k, iters=iters, manager=manager)
+        residency = [du.replica_residency(p) for p in pilots]
+        return res, residency
+    finally:
+        pds.close()
+        svc.cancel_all()
+
+
+def test_session_api_parity_with_legacy_surface():
+    """The acceptance bar: the same multi-pilot KMeans through both
+    surfaces gives the same numbers and the same per-pilot residency —
+    the façade changes ergonomics, not semantics."""
+    pts, _ = make_blobs(4_000, 8, d=8, seed=0)
+    parts, k, iters = 8, 8, 3
+    legacy, legacy_res = _legacy_multipilot_kmeans(pts, parts, k, iters)
+
+    with PilotSession() as s:
+        pilots = s.add_pilots(2, memory_gb=0.05)
+        du = s.data("pts", pts, parts=parts)
+        du.replicate_to_pilot(pilots[0], parts=range(0, parts // 2))
+        du.replicate_to_pilot(pilots[1], parts=range(parts // 2, parts))
+        v2 = s.kmeans(du, k=k, iters=iters)
+        v2_res = [du.replica_residency(p) for p in pilots]
+        # both pilots actually served CUs through the façade
+        assert len(s.manager.stats()["per_pilot"]) == 2
+
+    np.testing.assert_allclose(v2.centroids, legacy.centroids)
+    assert v2.sse_history == pytest.approx(legacy.sse_history)
+    assert v2_res == legacy_res
+
+
+def test_module_map_reduce_accepts_session_as_manager():
+    pts = np.ones((256, 4), np.float32)
+    with PilotSession() as s:
+        s.add_pilot(memory_gb=0.02)
+        du = s.data("mr", pts, parts=4)
+        via_session = s.map_reduce(du, lambda p: jnp.sum(p),
+                                   lambda a, b: a + b)
+        via_module = map_reduce(du, lambda p: jnp.sum(p),
+                                lambda a, b: a + b, manager=s)
+        assert float(via_session) == float(via_module) == 256 * 4
+        with pytest.raises(TypeError):
+            map_reduce(du, lambda p: p, lambda a, b: a + b,
+                       manager="not-a-manager")
+
+
+# -- bounded history + stats (satellite) ---------------------------------
+def test_manager_history_is_bounded_and_stats_exact():
+    svc = PilotComputeService()
+    try:
+        svc.submit_pilot(PilotComputeDescription(backend="inprocess"))
+        manager = ComputeDataManager(svc, history_limit=5)
+        cus = [manager.submit(ComputeUnitDescription(fn=lambda: None))
+               for _ in range(12)]
+        for cu in cus:
+            cu.wait(30)
+        assert len(manager.history) == 5            # window stays bounded
+        st = manager.stats()
+        assert st["submitted"] == 12                # lifetime stays exact
+        assert sum(st["per_pilot"].values()) == 12
+        assert st["history_limit"] == 5 and st["history_len"] == 5
+        # the window keeps the MOST RECENT decisions
+        assert [h["cu"] for h in manager.history] == [cu.id
+                                                      for cu in cus[-5:]]
+    finally:
+        svc.cancel_all()
+
+
+# -- configurable pre-binding wait bound (satellite) ---------------------
+def test_short_prebind_bound_lets_cu_proceed_past_stuck_stage_in():
+    svc = PilotComputeService()
+    try:
+        pilot = svc.submit_pilot(PilotComputeDescription(
+            backend="inprocess", prebind_wait_s=0.2))
+        assert pilot.desc.prebind_wait_s == 0.2
+        cu = ComputeUnit(ComputeUnitDescription(fn=lambda: "ran"))
+        cu.prebind_futures = [Future()]     # a stage-in that never lands
+        t0 = time.time()
+        pilot.submit_cu(cu)
+        assert cu.result(10) == "ran"
+        waited = time.time() - t0
+        assert 0.15 <= waited < 5.0         # bounded by the ask, not 120s
+    finally:
+        svc.cancel_all()
+
+
+def test_session_prebind_default_stamped_on_kwarg_pilots():
+    with PilotSession(prebind_wait_s=0.5) as s:
+        p = s.add_pilot(memory_gb=0.01)
+        assert p.desc.prebind_wait_s == 0.5
+        # an explicit description always wins over the session default
+        q = s.add_pilot(PilotComputeDescription(memory_gb=0.01))
+        assert q.desc.prebind_wait_s == 120.0

@@ -1,0 +1,124 @@
+"""Task-engine throughput: batched submit_tasks vs per-CU submission.
+
+The PR 6 tentpole gate.  Per-CU submission pays description + Future +
+uuid + a manager lock-and-score pass + a queue hop PER TASK — tens of
+microseconds each, capping the whole scheduling plane in the 10^4/s
+range.  The raptor-style engine amortizes all of it over a batch: ONE
+policy pass for the batch, slotted tasks, chunked dispatch into resident
+worker pools.  The gate (enforced here under ``--quick`` and again by
+``run.py``):
+
+  * ``bench_throughput.batched`` sustains >= 10^5 tiny tasks/s on the
+    in-process backend, and
+  * >= 20x the measured per-CU submission rate.
+
+A second record drives the batch across 4 pilots (the select_batch
+round-robin path + sharded stats locks) to keep the multi-pilot plane
+honest — it shares the 10^5/s floor.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import common
+from repro.core import PilotSession
+
+# the peak-rate run uses ONE worker per pilot: tiny pure-Python tasks
+# serialize on the GIL, so a second worker only adds contention (real
+# workloads releasing the GIL — jax, numpy, IO — scale with task_workers)
+N_SINGLE = 2_000
+N_BATCH_QUICK = 100_000
+N_BATCH_FULL = 300_000
+
+THROUGHPUT_MIN_TASKS_PER_S = 1e5
+THROUGHPUT_MIN_SPEEDUP = 20.0
+
+
+def _tiny() -> int:
+    return 1
+
+
+def _single_rate(s: PilotSession, n: int) -> float:
+    """Per-CU submission baseline: n tiny CUs through manager.submit."""
+    t0 = time.perf_counter()
+    cus = [s.run(_tiny) for _ in range(n)]
+    for cu in cus:
+        cu.result(timeout=60)
+    return n / (time.perf_counter() - t0)
+
+
+def _batched_rate(s: PilotSession, n: int, repeats: int = 3) -> float:
+    """Batched path: one submit_tasks call, best of `repeats` (the gate
+    measures the engine, not a cold first-touch of its worker threads)."""
+    items = [_tiny] * n
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        batch = s.submit_tasks(items)
+        assert batch.wait(timeout=120)
+        rate = n / (time.perf_counter() - t0)
+        best = max(best, rate)
+    return best
+
+
+def run(quick: bool = False):
+    n_batch = N_BATCH_QUICK if quick else N_BATCH_FULL
+
+    with PilotSession(name="bench-throughput") as s:
+        s.add_pilot(task_workers=1)
+        single = _single_rate(s, N_SINGLE)
+        batched = _batched_rate(s, n_batch)
+    speedup = batched / single if single > 0 else float("inf")
+
+    with PilotSession(name="bench-throughput4") as s:
+        s.add_pilots(4, task_workers=1)
+        multi = _batched_rate(s, n_batch)
+
+    common.emit("bench_throughput.single_cu", 1.0 / single,
+                f"{single:,.0f}/s")
+    common.emit("bench_throughput.batched", 1.0 / batched,
+                f"{batched:,.0f}/s speedup={speedup:.1f}x")
+    common.emit("bench_throughput.pilots4", 1.0 / multi,
+                f"{multi:,.0f}/s")
+    common.record("bench_throughput.batched",
+                  tasks=n_batch,
+                  tasks_per_s=batched,
+                  single_tasks_per_s=single,
+                  speedup_vs_single=speedup)
+    common.record("bench_throughput.pilots4",
+                  tasks=n_batch, pilots=4,
+                  tasks_per_s=multi)
+    return batched, single, speedup, multi
+
+
+def gate(records) -> None:
+    """The PR 6 guardrails (also wired into run.py's --quick gate)."""
+    rows = {r["name"]: r for r in records}
+    b = rows.get("bench_throughput.batched")
+    if b is None:
+        print("bench gate: no bench_throughput.batched record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if b.get("tasks_per_s", 0.0) < THROUGHPUT_MIN_TASKS_PER_S:
+        print(f"bench gate: batched engine only "
+              f"{b.get('tasks_per_s'):,.0f} tasks/s "
+              f"(target {THROUGHPUT_MIN_TASKS_PER_S:,.0f}/s)",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if b.get("speedup_vs_single", 0.0) < THROUGHPUT_MIN_SPEEDUP:
+        print(f"bench gate: batched engine only "
+              f"{b.get('speedup_vs_single'):.1f}x vs per-CU submission "
+              f"(target {THROUGHPUT_MIN_SPEEDUP}x)", file=sys.stderr)
+        raise SystemExit(1)
+    m = rows.get("bench_throughput.pilots4")
+    if m is None or m.get("tasks_per_s", 0.0) < THROUGHPUT_MIN_TASKS_PER_S:
+        print("bench gate: 4-pilot batched run missing or below "
+              f"{THROUGHPUT_MIN_TASKS_PER_S:,.0f} tasks/s", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(quick="--quick" in sys.argv)
+    gate(common.records())

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
 writes the machine-readable records (per-benchmark wall time, bytes staged,
-evictions) to a JSON artifact (default ``BENCH_pr2.json``; override with
+evictions) to a JSON artifact (default ``BENCH_pr6.json``; override with
 ``--json PATH``) so the perf trajectory is tracked across PRs.
 
 ``--quick`` is the CI smoke path: it runs the tiering, map_reduce,
@@ -11,9 +11,10 @@ exits non-zero if the pipelined map_reduce engine is slower than the
 sequential baseline, the 2-pilot distributed Pilot-Data run is below
 1.3x the single-pilot wall clock on the 2x-over-budget workload, the
 3x-over-budget checkpoint-tier workload fails to complete / loses to
-naive re-staging from the original file store, or cost-modelled
+naive re-staging from the original file store, cost-modelled
 cross-pilot sibling reads fail to beat re-pulling from a simulated slow
-home store.
+home store, or the batched task engine misses its >=10^5 tasks/s and
+>=20x-over-per-CU throughput floor.
 """
 from __future__ import annotations
 
@@ -25,7 +26,7 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr5.json"
+DEFAULT_JSON = "BENCH_pr6.json"
 MULTIPILOT_MIN_SPEEDUP = 1.3
 CHECKPOINT_MIN_SPEEDUP = 1.0
 SESSION_MIN_SPEEDUP = 1.5
@@ -95,6 +96,10 @@ def _gate(records) -> None:
         print("bench gate: PilotSession façade KMeans did not complete",
               file=sys.stderr)
         raise SystemExit(1)
+    # PR 6: the batched task engine must sustain >= 10^5 tiny tasks/s and
+    # >= 20x the per-CU submission rate (details in bench_throughput)
+    from benchmarks import bench_throughput
+    bench_throughput.gate(records)
 
 
 def main() -> None:
@@ -102,7 +107,8 @@ def main() -> None:
                             bench_fig7_storage, bench_fig8_profiles,
                             bench_fig9_kmeans, bench_kernels,
                             bench_mapreduce, bench_multipilot,
-                            bench_roofline, bench_session, bench_tiering,
+                            bench_roofline, bench_session,
+                            bench_throughput, bench_tiering,
                             bench_train_step)
     from benchmarks import common
     quick = "--quick" in sys.argv
@@ -119,6 +125,7 @@ def main() -> None:
         bench_multipilot.run(quick=True)
         bench_checkpoint.run(quick=True)
         bench_session.run(quick=True)
+        bench_throughput.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -127,7 +134,8 @@ def main() -> None:
     for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
                 bench_mapreduce, bench_multipilot, bench_checkpoint,
-                bench_session, bench_train_step, bench_roofline):
+                bench_session, bench_throughput, bench_train_step,
+                bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

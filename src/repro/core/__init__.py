@@ -36,6 +36,9 @@ from repro.core.pilotdata import PilotDataService
 from repro.core.scheduling import (InterconnectModel, Link, LocalityPolicy,
                                    LocalityWeights, SchedulingPolicy)
 from repro.core.session import PilotSession
+from repro.core.taskengine import (DispatchQueue, Task, TaskBatch,
+                                   TaskEngine, TaskError, WorkerPool,
+                                   current_pilot)
 from repro.core.tiering import (CapacityError, EvictionPolicy, GDSFPolicy,
                                 LRUPolicy, TierManager, make_policy,
                                 make_tier_manager)
@@ -53,4 +56,7 @@ __all__ = [
     "PilotSession", "MemoryDescription", "DurabilityDescription",
     "SchedulingPolicy", "LocalityPolicy", "LocalityWeights",
     "InterconnectModel", "Link",
+    # the high-throughput task engine (raptor-style batched dispatch)
+    "TaskEngine", "TaskBatch", "Task", "TaskError", "WorkerPool",
+    "DispatchQueue", "current_pilot",
 ]

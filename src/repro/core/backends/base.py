@@ -34,6 +34,22 @@ class ComputeBackend:
             pilot.attach_tier_manager(tm)
         return pilot
 
+    @staticmethod
+    def attach_worker_pool(pilot: PilotCompute,
+                           desc: PilotComputeDescription) -> PilotCompute:
+        """Provision the pilot's resident task-engine worker pool from
+        the description's `task_workers` / `dispatch_queue_depth` knobs
+        (raptor-style function-as-task executors pinned to this pilot and
+        its TierManager).  Threads start lazily on first submit_tasks, so
+        an unused pool costs nothing.  Shared by every adaptor, like
+        attach_managed_memory."""
+        from repro.core.taskengine import WorkerPool
+        pilot.worker_pool = WorkerPool(
+            pilot,
+            workers=getattr(desc, "task_workers", 2),
+            queue_depth=getattr(desc, "dispatch_queue_depth", 1024))
+        return pilot
+
     def release(self, pilot: PilotCompute) -> None:
         pilot.cancel()
 

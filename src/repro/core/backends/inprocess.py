@@ -52,6 +52,8 @@ class InProcessBackend(ComputeBackend):
         # per-pilot managed memory from desc.memory / desc.durability
         # (volatile budgets + the shared durable spill tier)
         self.attach_managed_memory(pilot, desc, mesh=mesh)
+        # resident task-engine workers (lazy threads; see taskengine)
+        self.attach_worker_pool(pilot, desc)
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

@@ -117,6 +117,9 @@ class SimulatedClusterBackend(ComputeBackend):
         # substrates participate in replica-aware scheduling /
         # multi-pilot Pilot-Data exactly like real ones
         self.attach_managed_memory(pilot, desc, mesh=mesh)
+        # same shared worker-pool provisioning as inprocess: simulated
+        # pilots serve the batched task engine too (fault tests drive it)
+        self.attach_worker_pool(pilot, desc)
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot

@@ -86,6 +86,8 @@ class ComputeDataManager:
     whole lifetime regardless of the window.
     """
 
+    _STAT_SHARDS = 8
+
     def __init__(self, service: PilotComputeService,
                  policy: Optional[SchedulingPolicy] = None,
                  history_limit: int = 1024):
@@ -93,9 +95,18 @@ class ComputeDataManager:
         self.policy: SchedulingPolicy = policy or LocalityPolicy()
         self.history_limit = max(1, int(history_limit))
         self.history: List[dict] = []   # bounded: see _record
-        self._stats_lock = threading.Lock()
-        self._submitted = 0
-        self._per_pilot: Dict[str, int] = {}
+        # stats locks are sharded BY PILOT (hash(pilot.id) -> shard), the
+        # same move PR 2 made for read accounting: batched submissions
+        # against different pilots account concurrently instead of
+        # serializing on one manager-wide lock.  A pilot always maps to
+        # the same shard, so its per-pilot counter stays exact; the
+        # lifetime total is the sum of per-shard counters.
+        n = self._STAT_SHARDS
+        self._stats_locks = [threading.Lock() for _ in range(n)]
+        self._submitted_shards = [0] * n
+        self._per_pilot_shards: List[Dict[str, int]] = [{} for _ in range(n)]
+        self._engine = None             # lazy TaskEngine (see .engine)
+        self._engine_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def score(self, pilot: PilotCompute,
@@ -129,6 +140,9 @@ class ComputeDataManager:
         return self._select_scored(cu_desc, timeout, exclude)[0]
 
     # ------------------------------------------------------------------
+    def _shard(self, pilot_id: str) -> int:
+        return hash(pilot_id) % self._STAT_SHARDS
+
     def _record(self, cu: ComputeUnit, pilot: PilotCompute,
                 score: float) -> None:
         """Append one placement decision, keeping `history` bounded and
@@ -138,16 +152,51 @@ class ComputeDataManager:
         overflow = len(self.history) - self.history_limit
         if overflow > 0:
             del self.history[:overflow]
-        with self._stats_lock:
-            self._submitted += 1
-            self._per_pilot[pilot.id] = self._per_pilot.get(pilot.id, 0) + 1
+        shard = self._shard(pilot.id)
+        with self._stats_locks[shard]:
+            self._submitted_shards[shard] += 1
+            pp = self._per_pilot_shards[shard]
+            pp[pilot.id] = pp.get(pilot.id, 0) + 1
+
+    def record_batch(self, pilot: PilotCompute, tasks, score: float) -> None:
+        """Account a whole engine batch bound to one pilot under that
+        pilot's stats shard: ONE lock pass and ONE counter update for N
+        tasks.  History gets per-task entries only up to the bounded
+        window (appending 10^5 dicts that the very next trim would drop
+        is pure hot-path waste), so small batches — e.g. the legacy
+        map_reduce path's one-CU-per-partition submissions — keep their
+        familiar one-entry-per-task history shape."""
+        n = len(tasks)
+        if n == 0:
+            return
+        now = time.time()
+        window = tasks if n <= self.history_limit \
+            else tasks[n - self.history_limit:]
+        pid = pilot.id
+        append = self.history.append
+        for t in window:
+            name = getattr(t.desc, "name", "") if t.desc is not None else ""
+            append({"cu": name or "fn-task", "pilot": pid,
+                    "score": score, "t": now})
+        overflow = len(self.history) - self.history_limit
+        if overflow > 0:
+            del self.history[:overflow]
+        shard = self._shard(pid)
+        with self._stats_locks[shard]:
+            self._submitted_shards[shard] += n
+            pp = self._per_pilot_shards[shard]
+            pp[pid] = pp.get(pid, 0) + n
 
     def stats(self) -> dict:
         """Lifetime scheduling summary (exact even after the bounded
-        `history` window has rolled over)."""
-        with self._stats_lock:
-            per_pilot = dict(self._per_pilot)
-            submitted = self._submitted
+        `history` window has rolled over): per-shard counters summed
+        under their own locks."""
+        submitted = 0
+        per_pilot: Dict[str, int] = {}
+        for i, lock in enumerate(self._stats_locks):
+            with lock:
+                submitted += self._submitted_shards[i]
+                per_pilot.update(self._per_pilot_shards[i])
         return {"policy": self.policy.name, "submitted": submitted,
                 "per_pilot": per_pilot,
                 "history_len": len(self.history),
@@ -210,6 +259,33 @@ class ComputeDataManager:
         return self.submit(ComputeUnitDescription(
             fn=fn, args=args, kwargs=kwargs, input_data=input_data,
             affinity=affinity))
+
+    # ------------------------------------------------------------------
+    @property
+    def engine(self):
+        """The manager's high-throughput task engine (lazy: sessions that
+        never call submit_tasks pay nothing for it)."""
+        eng = self._engine
+        if eng is None:
+            with self._engine_lock:
+                eng = self._engine
+                if eng is None:
+                    from repro.core.taskengine import TaskEngine
+                    eng = self._engine = TaskEngine(self)
+        return eng
+
+    def submit_tasks(self, items, *, retries: int = 0,
+                     timeout: float = 30.0):
+        """Batched function-as-task dispatch (the raptor-style engine):
+        the whole batch is scored in one policy pass and fed to the
+        chosen pilots' resident worker pools under backpressure.  Items
+        may be bare callables, ``(fn, args[, kwargs])`` tuples, or
+        ``ComputeUnitDescription``s; returns a ``TaskBatch`` of result
+        futures in submit order.  ``submit`` remains the single-CU path
+        with full CU semantics (pre-binding stage-in, mesh context,
+        per-CU Future)."""
+        return self.engine.submit_tasks(items, retries=retries,
+                                        timeout=timeout)
 
     def result_with_retry(self, cu_desc: ComputeUnitDescription,
                           retries: int = 2,

@@ -147,7 +147,8 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
                jit_map: bool = True,
                prefetch_depth: Optional[int] = None,
                pipeline: bool = True,
-               retries: int = 1) -> Any:
+               retries: int = 1,
+               prebind_wait_s: Optional[float] = None) -> Any:
     """map_fn(partition, *extra_args) -> value; reduce_fn(a, b) -> value.
 
     reduce_fn must be associative+commutative (combine order is not fixed:
@@ -166,6 +167,12 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
     fetch path, whose last resort is the durable checkpoint home, so a
     pilot failure costs a lazy restore instead of the whole job (0
     disables; partial results from healthy groups are never recomputed).
+
+    prebind_wait_s (managed paths): per-CU override of the pilot's
+    pre-binding stage-in wait bound, threaded onto every Compute-Unit
+    map_reduce submits internally (None = each pilot's configured
+    default) — a job scanning cold data once can cap how long a wedged
+    stage may delay its groups without re-describing the pilots.
     """
     if manager is not None and not isinstance(manager, ComputeDataManager):
         # a PilotSession (or anything façade-shaped) stands in for its
@@ -224,6 +231,7 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
             return manager.submit(ComputeUnitDescription(
                 fn=_fold, input_data=(du,), affinity=du.affinity,
                 prefetch_parts=tuple(idxs[:prebind]),
+                prebind_wait_s=prebind_wait_s,
                 name=f"{du.name}-mapg{gi:03d}"), pilot=grp_pilot)
 
         def _submit_home(gi, idxs, exclude):
@@ -233,6 +241,7 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
                     _depth_controller(du, prefetch_depth, idxs), "host"),
                 input_data=(du,), affinity=du.affinity,
                 prefetch_parts=tuple(idxs[:prebind]),
+                prebind_wait_s=prebind_wait_s,
                 name=f"{du.name}-mapg{gi:03d}"), exclude=exclude)
 
         def _submit_groups(indices, exclude):
@@ -280,19 +289,23 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
             jobs = _submit_groups(sorted(failed_idxs), exclude)
         return functools.reduce(reduce_fn, partials)
 
-    cus = []
-
     def _task(idx):
         du.prefetch(idx + 1)
         return compute(idx)
 
-    for i in range(du.num_partitions):
-        cus.append(manager.submit(ComputeUnitDescription(
+    # legacy one-CU-per-partition path, routed through the batched task
+    # engine: the N map tasks are scored in ONE policy pass and run on
+    # the pilots' resident worker pools instead of paying N submit()
+    # round-trips (results still reduce in partition order)
+    batch = manager.submit_tasks(
+        [ComputeUnitDescription(
             fn=lambda idx=i: _task(idx),
             input_data=(du,), affinity=du.affinity,
-            name=f"{du.name}-map{i:04d}")))
-    vals = [cu.result() for cu in cus]
-    return functools.reduce(reduce_fn, vals)
+            prebind_wait_s=prebind_wait_s,
+            name=f"{du.name}-map{i:04d}")
+         for i in range(du.num_partitions)],
+        retries=max(0, int(retries)))
+    return functools.reduce(reduce_fn, batch.results())
 
 
 def _pipeline_fold(du: DataUnit, indices, compute: Callable,

@@ -125,7 +125,17 @@ class FileBackend(StorageBackend):
         self.profile.charge(value.nbytes, write=True)
         path = self._path(name)
         path.parent.mkdir(parents=True, exist_ok=True)
-        np.save(path, value)
+        # write-to-temp + atomic rename: a concurrent reader of an
+        # overwritten key sees the old bytes or the new bytes, never a
+        # truncated file (the either-tier-consistency the staging
+        # protocol promises ends at this backend's put)
+        tmp = path.with_suffix(f".{os.getpid()}.{threading.get_ident()}.tmp")
+        try:
+            with open(tmp, "wb") as f:      # np.save on a path would
+                np.save(f, value)           # re-append the .npy suffix
+            os.replace(tmp, path)
+        finally:
+            tmp.unlink(missing_ok=True)
 
     def get(self, name: str) -> np.ndarray:
         arr = np.load(self._path(name), mmap_mode=None)

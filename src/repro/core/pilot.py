@@ -132,6 +132,10 @@ class PilotComputeDescription:
     # CU runs against wherever the data currently lives (scheduler config;
     # a stuck stage must delay a CU, never wedge it)
     prebind_wait_s: float = _PREBIND_WAIT_S
+    # the pilot's resident task-engine pool (raptor-style function tasks):
+    # worker-thread count and the backpressure bound of its dispatch queue
+    task_workers: int = 2
+    dispatch_queue_depth: int = 1024
 
     def __init__(self, backend: str = "inprocess", num_devices: int = 1,
                  mesh_axes: Tuple[str, ...] = ("data",),
@@ -141,6 +145,7 @@ class PilotComputeDescription:
                  affinity: str = "", queue_depth: int = 1024,
                  startup_seconds: float = 0.0,
                  prebind_wait_s: float = _PREBIND_WAIT_S,
+                 task_workers: int = 2, dispatch_queue_depth: int = 1024,
                  **legacy):
         unknown = set(legacy) - set(_MEMORY_FIELDS) - set(_DURABILITY_FIELDS)
         if unknown:
@@ -171,13 +176,21 @@ class PilotComputeDescription:
         if prebind_wait_s <= 0:
             raise ValueError("PilotComputeDescription: prebind_wait_s must "
                              f"be > 0, got {prebind_wait_s}")
+        if task_workers < 1:
+            raise ValueError("PilotComputeDescription: task_workers must "
+                             f"be >= 1, got {task_workers}")
+        if dispatch_queue_depth < 1:
+            raise ValueError("PilotComputeDescription: dispatch_queue_depth "
+                             f"must be >= 1, got {dispatch_queue_depth}")
         for k, v in (("backend", backend), ("num_devices", num_devices),
                      ("mesh_axes", tuple(mesh_axes)),
                      ("mesh_shape", tuple(mesh_shape)), ("memory", memory),
                      ("durability", durability), ("affinity", affinity),
                      ("queue_depth", queue_depth),
                      ("startup_seconds", startup_seconds),
-                     ("prebind_wait_s", prebind_wait_s)):
+                     ("prebind_wait_s", prebind_wait_s),
+                     ("task_workers", task_workers),
+                     ("dispatch_queue_depth", dispatch_queue_depth)):
             object.__setattr__(self, k, v)
 
     # -- flat legacy read access (v1 compat) ----------------------------
@@ -224,6 +237,9 @@ class ComputeUnitDescription:
     output_tier: Optional[str] = None       # stage result into this tier
     affinity: str = ""
     name: str = ""
+    # per-CU override of the pilot's prebind_wait_s (None = pilot default);
+    # map_reduce threads its own prebind_wait_s through here
+    prebind_wait_s: Optional[float] = None
 
 
 class ComputeUnit:
@@ -270,6 +286,9 @@ class PilotCompute:
         # the pilot's retained in-memory resources (Pilot-Data Memory): a
         # TierManager whose device-tier budget is this pilot's HBM share
         self.tier_manager = None           # Optional[TierManager]
+        # the pilot's resident task-engine worker pool (attached by the
+        # backend at provision time; lazily by the TaskEngine otherwise)
+        self.worker_pool = None            # Optional[taskengine.WorkerPool]
 
     # ------------------------------------------------------------------
     def start(self):
@@ -302,7 +321,10 @@ class PilotCompute:
             # The wait is bounded per future by the pilot's configured
             # prebind_wait_s, so a wedged stager delays the CU, never
             # hangs it.
-            wait_s = getattr(self.desc, "prebind_wait_s", _PREBIND_WAIT_S)
+            wait_s = getattr(cu.desc, "prebind_wait_s", None)
+            if wait_s is None:
+                wait_s = getattr(self.desc, "prebind_wait_s",
+                                 _PREBIND_WAIT_S)
             for f in cu.prebind_futures:
                 try:
                     f.result(timeout=wait_s)
@@ -361,12 +383,20 @@ class PilotCompute:
     @property
     def utilization(self) -> float:
         with self._lock:
-            return self._running + self._queue.qsize()
+            u = self._running + self._queue.qsize()
+        pool = self.worker_pool
+        if pool is not None:
+            u += pool.queue.depth       # engine backlog counts as load
+        return u
 
     def cancel(self):
         self._queue.put(None)
         if self._worker:
             self._worker.join(timeout=10)
+        if self.worker_pool is not None:
+            # drain the task-engine pool BEFORE closing the tiers: queued
+            # function tasks may still read managed partitions
+            self.worker_pool.close()
         if self.tier_manager is not None:
             self.tier_manager.close()   # stop the stager threads
         self.state = State.CANCELED if self.state != State.DONE else self.state

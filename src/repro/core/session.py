@@ -222,6 +222,18 @@ class PilotSession:
     def submit(self, cu_desc: ComputeUnitDescription, **kw) -> ComputeUnit:
         return self.manager.submit(cu_desc, **kw)
 
+    def submit_tasks(self, items, *, retries: int = 0,
+                     timeout: float = 30.0):
+        """Batched function-as-task dispatch through the session's
+        high-throughput task engine: the whole batch is scored in one
+        policy pass and executed on the pilots' resident worker pools.
+        Items may be bare callables, ``(fn, args[, kwargs])`` tuples, or
+        ``ComputeUnitDescription``s; returns a ``TaskBatch`` whose
+        ``results()`` preserves submit order.  ``submit``/``run`` remain
+        the single-CU path with full CU semantics."""
+        return self.manager.submit_tasks(items, retries=retries,
+                                         timeout=timeout)
+
     def map_reduce(self, du: DataUnit, map_fn, reduce_fn, **kw):
         """The replica-aware pipelined map_reduce engine, bound to this
         session's manager (all map_reduce kwargs pass through)."""

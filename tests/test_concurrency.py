@@ -316,3 +316,90 @@ def test_stager_close_drains_inflight_deterministically(tmp_path):
     assert sum(res.values()) == du.num_partitions
     np.testing.assert_array_equal(
         np.concatenate(list(du.partitions())), arr)
+
+
+def test_task_engine_stress_producers_vs_lose_volatile(tmp_path):
+    """Scheduling-plane stress: many producer threads batch-submitting
+    against 4 pilots (sharded stats locks, per-pilot dispatch queues)
+    while volatile-memory loss fires mid-flight.  Every future must
+    resolve — a value directly, or through the engine's re-bind retry —
+    and nothing may deadlock: data reads fall back through the
+    PilotDataService to the home placement when a pilot's tiers refuse
+    (lose_volatile raises CapacityError on new placements), and failed
+    tasks re-bind onto surviving-tier pilots."""
+    import random
+
+    from repro.core import PilotSession
+    from repro.core.taskengine import current_pilot
+
+    arr = np.arange(8 * 16, dtype=np.float32).reshape(8, 16)
+    part_sums = [float(arr[i].sum()) for i in range(8)]
+    with PilotSession(name="engine-stress") as s:
+        pilots = s.add_pilots(4, memory_gb=0.001, task_workers=2,
+                              dispatch_queue_depth=64)
+        du = s.data("stress", arr, parts=8)
+        stop = threading.Event()
+
+        def chaos():
+            rng = random.Random(1234)
+            while not stop.is_set():
+                p = rng.choice(pilots)
+                if p.tier_manager is not None:
+                    p.tier_manager.lose_volatile()
+                stop.wait(0.02)
+
+        def read_task(i):
+            # read through the executing pilot's own replica layer; a
+            # lost tier refuses placement and the read falls back home
+            p = current_pilot()
+            return float(np.asarray(du.partition(i, pilot=p)).sum())
+
+        def make_flaky():
+            state = {"n": 0}
+            lk = threading.Lock()
+
+            def flaky():
+                with lk:
+                    state["n"] += 1
+                    if state["n"] == 1:
+                        raise RuntimeError("transient")
+                return -1.0
+            return flaky
+
+        errors = []
+
+        def producer(seed):
+            try:
+                rng = random.Random(seed)
+                for _ in range(4):
+                    items = []
+                    want = []
+                    for _ in range(60):
+                        if rng.random() < 0.2:
+                            items.append(make_flaky())
+                            want.append(-1.0)
+                        else:
+                            i = rng.randrange(8)
+                            items.append((read_task, (i,)))
+                            want.append(part_sums[i])
+                    batch = s.submit_tasks(items, retries=3)
+                    got = batch.results(timeout=60)
+                    assert got == want
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        ct = threading.Thread(target=chaos, daemon=True)
+        ct.start()
+        producers = [threading.Thread(target=producer, args=(s_,))
+                     for s_ in range(6)]
+        for t in producers:
+            t.start()
+        for t in producers:
+            t.join(120)
+            assert not t.is_alive(), "producer deadlocked"
+        stop.set()
+        ct.join(10)
+        if errors:
+            raise errors[0]
+        st = s.manager.stats()
+        assert st["submitted"] >= 6 * 4 * 60   # re-binds only add to it

@@ -158,3 +158,75 @@ def test_unmanaged_du_pipeline_is_a_noop_fallback(tmp_path):
     assert du.prefetch_window(0, 3) == []
     assert _sum_mr(du, prefetch_depth=4) == pytest.approx(float(arr.sum()),
                                                           rel=1e-5)
+
+
+def test_prebind_wait_s_threads_through_map_reduce_submissions(tmp_path):
+    """Regression: `prebind_wait_s` was plumbed through `submit` but not
+    through map_reduce's internal submissions — every CU description
+    map_reduce builds (pipelined groups AND the legacy per-partition
+    path) must now carry the caller's override."""
+    svc = PilotComputeService()
+    try:
+        svc.submit_pilot(PilotComputeDescription(backend="inprocess"))
+        manager = ComputeDataManager(svc)
+        backends = {"host": make_backend("host"),
+                    "device": make_backend("device")}
+        arr = np.ones((64, 4), np.float32)
+        du = DataUnit.from_array("pw", arr, 4, backends, tier="host")
+
+        seen = []
+        orig_submit = manager.submit
+        orig_submit_tasks = manager.submit_tasks
+
+        def spy_submit(cu_desc, **kw):
+            seen.append(cu_desc.prebind_wait_s)
+            return orig_submit(cu_desc, **kw)
+
+        def spy_submit_tasks(items, **kw):
+            seen.extend(d.prebind_wait_s for d in items)
+            return orig_submit_tasks(items, **kw)
+
+        manager.submit = spy_submit
+        manager.submit_tasks = spy_submit_tasks
+
+        ref = float(arr.sum())
+        total = map_reduce(du, lambda p: jnp.sum(p), lambda a, b: a + b,
+                           manager=manager, prebind_wait_s=0.5)
+        assert total == pytest.approx(ref, rel=1e-5)
+        total = map_reduce(du, lambda p: jnp.sum(p), lambda a, b: a + b,
+                           manager=manager, pipeline=False,
+                           prebind_wait_s=0.5)
+        assert total == pytest.approx(ref, rel=1e-5)
+        assert seen and all(w == 0.5 for w in seen)
+
+        # default stays None: each pilot's own configured bound applies
+        seen.clear()
+        map_reduce(du, lambda p: jnp.sum(p), lambda a, b: a + b,
+                   manager=manager)
+        assert seen and all(w is None for w in seen)
+    finally:
+        svc.cancel_all()
+
+
+def test_cu_prebind_wait_s_overrides_pilot_default():
+    """A CU-level prebind_wait_s bounds the stage-in wait even when the
+    pilot's default is effectively unbounded: a CU carrying a
+    never-resolving prebind future must start after ITS OWN bound."""
+    from concurrent.futures import Future
+
+    from repro.core.pilot import ComputeUnit, ComputeUnitDescription
+    import time as _time
+
+    svc = PilotComputeService()
+    try:
+        pilot = svc.submit_pilot(PilotComputeDescription(
+            backend="inprocess", prebind_wait_s=300.0))
+        cu = ComputeUnit(ComputeUnitDescription(
+            fn=lambda: "ran", prebind_wait_s=0.2))
+        cu.prebind_futures = [Future()]     # wedged stage-in, never lands
+        t0 = _time.perf_counter()
+        pilot.submit_cu(cu)
+        assert cu.result(timeout=30) == "ran"
+        assert _time.perf_counter() - t0 < 10.0     # 0.2s bound, not 300
+    finally:
+        svc.cancel_all()

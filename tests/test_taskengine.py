@@ -1,0 +1,289 @@
+"""Task-engine contract: batched-vs-single parity, pool lifecycle,
+backpressure, batch scoring == N single scores, retry/re-bind.
+
+The engine (repro.core.taskengine) is the raptor-style batched dispatch
+plane: resident per-pilot worker pools fed through backpressure-bounded
+queues, the whole batch scored in one SchedulingPolicy pass.  These tests
+pin the contracts the throughput work must never trade away: results
+match the per-CU path exactly, no accepted task is lost to shutdown, the
+bound is a real bound, batch scoring is bit-for-bit N single scores, and
+failures re-bind with the PR 4 exclusion semantics.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputeDataManager, ComputeUnitDescription,
+                        DataUnit, LocalityPolicy, PilotComputeDescription,
+                        PilotComputeService, PilotSession, make_backend)
+from repro.core.taskengine import (DispatchQueue, TaskError, WorkerPool,
+                                   current_pilot)
+
+
+# -- batched vs single parity ---------------------------------------------
+def test_batched_results_match_single_submission():
+    with PilotSession() as s:
+        s.add_pilot()
+        want = [s.run(pow, 2, i).result(timeout=30) for i in range(20)]
+        got = s.submit_tasks([(pow, (2, i)) for i in range(20)])
+        assert got.results(timeout=30) == want
+
+
+def test_submit_tasks_accepts_all_item_forms():
+    with PilotSession() as s:
+        s.add_pilot()
+        batch = s.submit_tasks([
+            lambda: "bare",
+            (int, ("ff", 16)),
+            (dict, (), {"a": 1}),
+            ComputeUnitDescription(fn=lambda x: x + 1, args=(41,),
+                                   name="desc-task"),
+        ])
+        assert batch.results(timeout=30) == ["bare", 255, {"a": 1}, 42]
+        with pytest.raises(TypeError):
+            s.submit_tasks([42])
+
+
+def test_task_error_surfaces_and_batch_keeps_order():
+    def boom():
+        raise ValueError("boom")
+
+    with PilotSession() as s:
+        s.add_pilot()
+        batch = s.submit_tasks([lambda: 1, boom, lambda: 3])
+        assert batch.wait(timeout=30)
+        assert batch[0].result() == 1
+        assert batch[2].result() == 3
+        with pytest.raises(ValueError, match="boom"):
+            batch[1].result()
+        assert isinstance(batch[1].exception(), ValueError)
+        with pytest.raises(ValueError):
+            batch.results()
+
+
+def test_tasks_run_pinned_to_their_pilot():
+    """current_pilot() inside a task is the bound pilot — the raptor
+    property that lets function tasks read the pilot's tiers without
+    re-staging."""
+    with PilotSession() as s:
+        p = s.add_pilot()
+        batch = s.submit_tasks([lambda: current_pilot().id] * 8)
+        assert batch.results(timeout=30) == [p.id] * 8
+    assert current_pilot() is None      # only worker threads are pinned
+
+
+# -- worker-pool lifecycle ------------------------------------------------
+def test_pool_drains_on_close_no_task_lost():
+    """close() is a drain barrier: every accepted task runs, the worker
+    threads join, and nothing leaks."""
+    before = {t.name for t in threading.enumerate()}
+    done = []
+    with PilotSession() as s:
+        s.add_pilot(task_workers=2)
+        batch = s.submit_tasks([lambda i=i: done.append(i) or i
+                                for i in range(500)])
+        # close() without waiting: the drain must finish the backlog
+    assert batch.done
+    assert sorted(t.result() for t in batch) == list(range(500))
+    assert len(done) == 500
+    leaked = [t for t in threading.enumerate()
+              if "-taskw" in t.name and t.name not in before and t.is_alive()]
+    assert not leaked
+
+
+def test_pool_rejects_after_close_and_never_started_pool_drains_inline():
+    svc = PilotComputeService()
+    pilot = svc.submit_pilot(PilotComputeDescription())
+    pool = pilot.worker_pool
+    try:
+        # enqueue without starting workers, then close: the backlog is
+        # finalized inline (accounting conserved), not stranded
+        q = pool.queue
+        assert q.put([1, 2, 3]) == 3     # raw items: never executed, but
+        q.close()                        # the queue contract still drains
+        while q.take(timeout=0):
+            pass
+        assert q.taken == q.accepted == 3
+        assert q.depth == 0
+        assert q.put([4]) == 0           # closed queues refuse new work
+    finally:
+        svc.cancel_all()
+
+
+def test_engine_fails_tasks_cleanly_when_pool_is_closed():
+    with PilotSession() as s:
+        p = s.add_pilot()
+        b1 = s.submit_tasks([lambda: 1])
+        assert b1.results(timeout=30) == [1]
+        p.worker_pool.close()
+        b2 = s.manager.engine.submit_tasks([lambda: 2])
+        assert b2.wait(timeout=30)
+        with pytest.raises(TaskError):
+            b2[0].result()
+
+
+# -- backpressure ---------------------------------------------------------
+def test_dispatch_queue_backpressure_bound_is_honored():
+    gate = threading.Event()
+    peak = []
+
+    with PilotSession() as s:
+        p = s.add_pilot(task_workers=1, dispatch_queue_depth=8)
+        pool = p.worker_pool
+        blocker = s.submit_tasks([gate.wait])       # occupies the worker
+
+        def producer():
+            s.submit_tasks([lambda: None] * 64)     # must block at the bound
+
+        t = threading.Thread(target=producer)
+        t.start()
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and pool.queue.depth < 8:
+            time.sleep(0.002)
+        for _ in range(200):
+            peak.append(pool.queue.depth)
+            time.sleep(0.001)
+        assert max(peak) <= 8                       # the bound is a bound
+        gate.set()
+        t.join(30)
+        assert not t.is_alive()
+        assert blocker.wait(timeout=30)
+    assert max(peak) == 8                           # and it was reached
+
+
+def test_dispatch_queue_put_timeout_returns_partial_count():
+    q = DispatchQueue(bound=4, chunk=2)
+    assert q.put([1, 2, 3, 4]) == 4
+    assert q.put([5, 6], timeout=0.05) == 0         # full: timed out
+    assert q.depth == 4
+    assert q.put_force([5, 6]) == 2                 # re-bind path overshoots
+    assert q.depth == 6
+    got = []
+    while q.depth:
+        got.extend(q.take(timeout=1))
+    assert got == [1, 2, 3, 4, 5, 6]                # FIFO, no loss, no dupes
+    assert q.taken == q.accepted == 6
+
+
+# -- batch scoring --------------------------------------------------------
+def _du_on(tmp_path, name="sc", parts=4):
+    backends = {"host": make_backend("host"),
+                "device": make_backend("device")}
+    arr = np.arange(parts * 8, dtype=np.float32).reshape(parts, 8)
+    return DataUnit.from_array(name, arr, parts, backends, tier="host")
+
+
+def test_score_batch_equals_n_single_scores(tmp_path):
+    svc = PilotComputeService()
+    try:
+        pilots = [svc.submit_pilot(PilotComputeDescription(memory_gb=0.01))
+                  for _ in range(2)]
+        policy = LocalityPolicy()
+        du = _du_on(tmp_path)
+        descs = [ComputeUnitDescription(fn=lambda: None, input_data=(du,),
+                                        affinity="a" if i % 2 else "")
+                 for i in range(16)]
+        for p in pilots:
+            singles = [policy.score(p, d) for d in descs]
+            assert policy.score_batch(p, descs) == singles   # bit-for-bit
+    finally:
+        svc.cancel_all()
+
+
+def test_select_batch_round_robins_equal_pilots():
+    svc = PilotComputeService()
+    try:
+        pilots = [svc.submit_pilot(PilotComputeDescription())
+                  for _ in range(3)]
+        policy = LocalityPolicy()
+        descs = [ComputeUnitDescription(fn=lambda: None)] * 30
+        placed = policy.select_batch(pilots, descs)
+        counts = {}
+        for p, _ in placed:
+            counts[p.id] = counts.get(p.id, 0) + 1
+        # one scoring pass + incremental queue penalty spreads equal
+        # pilots evenly instead of piling the whole batch on the first
+        assert sorted(counts.values()) == [10, 10, 10]
+    finally:
+        svc.cancel_all()
+
+
+def test_engine_batch_counts_in_manager_stats():
+    with PilotSession() as s:
+        s.add_pilots(2)
+        before = s.manager.stats()["submitted"]
+        s.submit_tasks([lambda: None] * 64).wait(timeout=30)
+        st = s.manager.stats()
+        assert st["submitted"] - before == 64
+        assert sum(st["per_pilot"].values()) == st["submitted"]
+
+
+# -- retry / re-bind ------------------------------------------------------
+def test_retry_rebinds_flaky_task_and_exhausts_budget():
+    fails = {"n": 0}
+    lock = threading.Lock()
+
+    def flaky_once():
+        with lock:
+            fails["n"] += 1
+            if fails["n"] == 1:
+                raise RuntimeError("transient")
+        return "ok"
+
+    with PilotSession() as s:
+        s.add_pilots(2)
+        assert s.submit_tasks([flaky_once],
+                              retries=1).results(timeout=30) == ["ok"]
+
+        def always():
+            raise RuntimeError("permanent")
+
+        batch = s.submit_tasks([always], retries=0)
+        assert batch.wait(timeout=30)
+        with pytest.raises(RuntimeError, match="permanent"):
+            batch[0].result()
+
+
+def test_retry_exclusion_resets_when_all_pilots_failed():
+    """PR 4 semantics, task-batched: with ONE pilot and retries=3, a
+    twice-flaky task must land back on the same pilot (exclusion reset)
+    instead of stranding."""
+    fails = {"n": 0}
+    lock = threading.Lock()
+
+    def flaky_twice():
+        with lock:
+            fails["n"] += 1
+            if fails["n"] <= 2:
+                raise RuntimeError(f"transient {fails['n']}")
+        return fails["n"]
+
+    with PilotSession() as s:
+        s.add_pilot()
+        assert s.submit_tasks([flaky_twice],
+                              retries=3).results(timeout=30) == [3]
+
+
+def test_rebound_task_lands_on_surviving_pilot():
+    """A task raising on pilot A re-binds onto pilot B (A excluded)."""
+    with PilotSession() as s:
+        a, b = s.add_pilots(2)
+        seen = []
+        lock = threading.Lock()
+
+        def tattle():
+            pid = current_pilot().id
+            with lock:
+                seen.append(pid)
+                if len(seen) == 1:
+                    raise RuntimeError("first landing fails")
+            return pid
+
+        batch = s.submit_tasks([tattle], retries=2)
+        assert batch.wait(timeout=30)
+        final = batch[0].result()
+        assert final == seen[-1]
+        assert len(seen) >= 2
+        assert seen[1] != seen[0]       # excluded the pilot that failed it

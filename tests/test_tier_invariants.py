@@ -145,3 +145,124 @@ def test_close_leaves_no_orphan_checkpoint_files(ops):
                 assert reopened.exists(key)     # pressure filler
     finally:
         shutil.rmtree(root, ignore_errors=True)
+
+
+# -- dispatch-queue properties (the task engine's backpressure bound) -----
+from repro.core.taskengine import DispatchQueue
+
+_Q_BOUND = 8
+
+
+def _q_decode(op: int):
+    """One opcode -> (kind, size); modular decode, like _decode above.
+    kind 0: put  1: put_force  2: take  3: close (rare: op%23==0)."""
+    if op % 23 == 0:
+        return 3, 0
+    return op % 3, 1 + (op // 7) % 6
+
+
+def _q_apply(q, model, op: int) -> None:
+    """Apply one decoded op to the queue and the reference model.
+    `model` is {"pending": [...], "taken": [...], "forced": int}."""
+    kind, size = _q_decode(op)
+    if kind == 0:
+        items = [f"i{q.accepted + j}" for j in range(size)]
+        n = q.put(items, timeout=0)         # never block: partial accept
+        model["pending"].extend(items[:n])
+    elif kind == 1:
+        items = [f"f{q.accepted + j}" for j in range(size)]
+        n = q.put_force(items)
+        assert n in (0, size)               # all-or-nothing (closed = 0)
+        model["pending"].extend(items[:n])
+        model["forced"] += n
+    elif kind == 2:
+        chunk = q.take(timeout=0)
+        if chunk:
+            # FIFO: the chunk is exactly the next pending prefix
+            assert chunk == model["pending"][:len(chunk)]
+            del model["pending"][:len(chunk)]
+            model["taken"].extend(chunk)
+    else:
+        q.close()
+
+
+def _q_invariants(q, model) -> None:
+    # conservation: accounting matches the model at every step
+    assert q.depth == q.accepted - q.taken
+    assert q.depth == len(model["pending"])
+    assert q.taken == len(model["taken"])
+    # the bound is violated only by what put_force explicitly forced
+    assert q.depth <= _Q_BOUND + model["forced"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.integers(0, 10_000), min_size=1, max_size=60))
+def test_dispatch_queue_random_ops_conserve_accounting(ops):
+    """Arbitrary put/put_force/take/close interleavings: accounting is
+    conserved at every step, the backlog drains exactly once in FIFO
+    order after close — no task dropped, none double-taken."""
+    q = DispatchQueue(bound=_Q_BOUND, chunk=3)
+    model = {"pending": [], "taken": [], "forced": 0}
+    for op in ops:
+        _q_apply(q, model, op)
+        _q_invariants(q, model)
+    q.close()
+    while True:                             # drain protocol
+        chunk = q.take(timeout=0)
+        if not chunk:
+            assert chunk is None            # closed AND empty -> None
+            break
+        assert chunk == model["pending"][:len(chunk)]
+        del model["pending"][:len(chunk)]
+        model["taken"].extend(chunk)
+    assert not model["pending"]
+    assert q.taken == q.accepted            # every accepted item ran
+    assert q.depth == 0
+    # total order: taken == accepted stream, exactly once each
+    assert len(model["taken"]) == len(set(model["taken"])) == q.accepted
+
+
+def test_dispatch_queue_threaded_interleaving_no_loss_no_dup():
+    """Producers (bounded + forced) race consumers: after close+drain
+    every accepted item was taken exactly once."""
+    import threading as _t
+
+    q = DispatchQueue(bound=16, chunk=4)
+    taken = []
+    tlock = _t.Lock()
+    done = _t.Event()
+
+    def consumer():
+        while True:
+            chunk = q.take(timeout=0.5)
+            if chunk is None:
+                return
+            if chunk:
+                with tlock:
+                    taken.extend(chunk)
+
+    def producer(tag, force):
+        for j in range(200):
+            item = f"{tag}-{j}"
+            if force:
+                q.put_force([item])
+            else:
+                while not q.put([item], timeout=0.1) and not done.is_set():
+                    pass
+
+    consumers = [_t.Thread(target=consumer) for _ in range(3)]
+    producers = [_t.Thread(target=producer, args=(f"p{k}", k == 2))
+                 for k in range(3)]
+    for t in consumers + producers:
+        t.start()
+    for t in producers:
+        t.join(30)
+        assert not t.is_alive()
+    done.set()
+    q.close()
+    for t in consumers:
+        t.join(30)
+        assert not t.is_alive()
+    assert q.taken == q.accepted == 600
+    assert q.depth == 0
+    assert len(taken) == len(set(taken)) == 600

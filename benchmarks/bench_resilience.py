@@ -1,0 +1,165 @@
+"""PR 7 resilience bench: chaos-kill one of N pilots mid-KMeans.
+
+The self-healing contract, measured end-to-end on the acceptance
+workload (the paper's §4.3 KMeans over a replicated points DataUnit):
+
+  * ``fault_free`` — 3 pilots, replication target 2, no chaos: the
+    baseline wall clock;
+  * ``chaos_kill`` — same fleet + a supervised session, one pilot killed
+    (volatile tiers wiped) mid-run by a ChaosPolicy schedule.  The
+    supervisor must detect the death, respawn a replacement from the
+    dead pilot's own description, and the repair worker must restore the
+    declared replication target — while map_reduce's task-level retries
+    keep the KMeans converging.
+
+The gate asserts: ZERO data loss (every partition byte-identical to the
+source after the storm), replication restored to target on every
+partition, at least one recorded respawn, and chaos wall time within
+``MAX_SLOWDOWN``x of fault-free.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import PilotSession, make_blobs
+from repro.core.backends.base import register_backend
+from repro.core.backends.simulated import (ChaosEvent, ChaosPolicy,
+                                           FaultPolicy,
+                                           SimulatedClusterBackend)
+
+MAX_SLOWDOWN = 1.5          # chaos run vs fault-free wall time
+REPLICATION = 2
+
+
+def _fleet(s: PilotSession, mem_gb: float):
+    victim = s.add_pilot(backend="simulated", startup_seconds=0.01,
+                         memory_gb=mem_gb, host_memory_gb=4 * mem_gb)
+    others = s.add_pilots(2, memory_gb=mem_gb, host_memory_gb=4 * mem_gb)
+    return victim, others
+
+
+def _kmeans_storm(pts, parts: int, iters: int, chaos: bool,
+                  kill_at_s: float, tag: str):
+    """One supervised KMeans run; with chaos=True the first simulated
+    pilot is killed (memory wiped) mid-run."""
+    policy = (ChaosPolicy(lose_memory=True, target_index=0,
+                          events=(ChaosEvent(at_s=kill_at_s,
+                                             action="kill"),))
+              if chaos else FaultPolicy())
+    register_backend(SimulatedClusterBackend(substrate="slurm",
+                                             policy=policy))
+    mem_gb = max(0.02, 4.0 * pts.nbytes / 2 ** 30)
+    out = {}
+    ckdir = tempfile.mkdtemp(prefix=f"bench-resilience-{tag}-")
+    with PilotSession(name=f"bench-resilience-{tag}", supervise=True,
+                      checkpoint_dir=ckdir,
+                      supervisor_kwargs={"interval_s": 0.02,
+                                         "min_heartbeat_s": 0.05,
+                                         "repair_interval_s": 0.05}) as s:
+        victim, _ = _fleet(s, mem_gb)
+        du = s.data("pts", pts, parts=parts, persist=True,
+                    replication=REPLICATION)
+        s.data_service.replicate_to_pilot(du, victim.id, tier="host")
+        t0 = time.perf_counter()
+        res = s.kmeans(du, k=8, iters=iters)
+        out["kmeans_s"] = time.perf_counter() - t0
+        out["sse"] = res.sse_history[-1]
+        # let detection + respawn + repair drain (bounded)
+        deadline = time.monotonic() + 30.0
+        while chaos and time.monotonic() < deadline:
+            rs = s.data_service.replication_stats()["pts"]
+            if s.supervisor.respawns and rs["under"] == 0:
+                break
+            time.sleep(0.05)
+        out["wall_s"] = time.perf_counter() - t0
+        sup = s.stats()["supervisor"]
+        rs = s.data_service.replication_stats()["pts"]
+        out["respawns"] = len(sup["respawns"])
+        out["repairs"] = s.data_service.counters["repairs"]
+        out["under_replicated"] = rs["under"]
+        out["min_replicas"] = min(rs["per_partition"].values())
+        # zero-data-loss audit: every partition byte-identical to source
+        ref = np.array_split(pts, parts, axis=0)
+        out["data_intact"] = all(
+            np.array_equal(np.asarray(du.partition(i)), ref[i])
+            for i in range(parts))
+    shutil.rmtree(ckdir, ignore_errors=True)
+    return out
+
+
+def run(quick: bool = False):
+    n = 400_000 if quick else 1_200_000
+    parts = 12 if quick else 16
+    iters = 5 if quick else 8
+    pts, _ = make_blobs(n, 8, d=8, seed=0)
+
+    # warmup: pay the jit compilation outside the timed comparison
+    _kmeans_storm(pts, parts, 1, chaos=False, kill_at_s=1e9, tag="warmup")
+    base = _kmeans_storm(pts, parts, iters, chaos=False, kill_at_s=1e9,
+                         tag="fault-free")
+    # kill lands mid-run: after the first iteration is underway
+    kill_at = max(0.02, 0.3 * base["kmeans_s"])
+    storm = _kmeans_storm(pts, parts, iters, chaos=True,
+                          kill_at_s=kill_at, tag="chaos")
+
+    slowdown = (storm["kmeans_s"] / base["kmeans_s"]
+                if base["kmeans_s"] > 0 else float("inf"))
+    common.emit("bench_resilience.fault_free", base["kmeans_s"],
+                f"parts={parts} iters={iters}")
+    common.emit("bench_resilience.chaos_kill", storm["kmeans_s"],
+                f"slowdown={slowdown:.2f}x respawns={storm['respawns']} "
+                f"repairs={storm['repairs']} "
+                f"intact={storm['data_intact']}")
+    common.record("bench_resilience.chaos_kill",
+                  seconds=storm["kmeans_s"],
+                  fault_free_seconds=base["kmeans_s"],
+                  slowdown_vs_fault_free=slowdown,
+                  max_slowdown=MAX_SLOWDOWN,
+                  respawns=storm["respawns"],
+                  repairs=storm["repairs"],
+                  under_replicated=storm["under_replicated"],
+                  min_replicas=storm["min_replicas"],
+                  replication_target=REPLICATION,
+                  data_intact=storm["data_intact"],
+                  sse=storm["sse"], parts=parts, iters=iters, n=n)
+
+
+def gate(records) -> None:
+    """CI guardrails for the self-healing path (raises SystemExit)."""
+    import sys
+    rows = {r["name"]: r for r in records}
+    r = rows.get("bench_resilience.chaos_kill")
+    if r is None:
+        print("bench gate: no bench_resilience.chaos_kill record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if not r.get("data_intact"):
+        print("bench gate: chaos kill LOST DATA (partition mismatch "
+              "after recovery)", file=sys.stderr)
+        raise SystemExit(1)
+    if r.get("respawns", 0) < 1:
+        print("bench gate: chaos kill produced no respawn", file=sys.stderr)
+        raise SystemExit(1)
+    if (r.get("under_replicated", 1) != 0
+            or r.get("min_replicas", 0) < r.get("replication_target", 2)):
+        print(f"bench gate: replication not restored "
+              f"(under={r.get('under_replicated')} "
+              f"min={r.get('min_replicas')} "
+              f"target={r.get('replication_target')})", file=sys.stderr)
+        raise SystemExit(1)
+    if r.get("slowdown_vs_fault_free", float("inf")) > MAX_SLOWDOWN:
+        print(f"bench gate: chaos run "
+              f"{r.get('slowdown_vs_fault_free'):.2f}x fault-free wall "
+              f"time (ceiling {MAX_SLOWDOWN}x)", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)
+    gate(common.records())

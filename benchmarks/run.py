@@ -2,19 +2,21 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
 writes the machine-readable records (per-benchmark wall time, bytes staged,
-evictions) to a JSON artifact (default ``BENCH_pr6.json``; override with
+evictions) to a JSON artifact (default ``BENCH_pr7.json``; override with
 ``--json PATH``) so the perf trajectory is tracked across PRs.
 
 ``--quick`` is the CI smoke path: it runs the tiering, map_reduce,
-multi-pilot, checkpoint, and session benches, writes the artifact, and
-exits non-zero if the pipelined map_reduce engine is slower than the
-sequential baseline, the 2-pilot distributed Pilot-Data run is below
-1.3x the single-pilot wall clock on the 2x-over-budget workload, the
-3x-over-budget checkpoint-tier workload fails to complete / loses to
-naive re-staging from the original file store, cost-modelled
-cross-pilot sibling reads fail to beat re-pulling from a simulated slow
-home store, or the batched task engine misses its >=10^5 tasks/s and
->=20x-over-per-CU throughput floor.
+multi-pilot, checkpoint, session, throughput, and resilience benches,
+writes the artifact, and exits non-zero if the pipelined map_reduce
+engine is slower than the sequential baseline, the 2-pilot distributed
+Pilot-Data run is below 1.3x the single-pilot wall clock on the
+2x-over-budget workload, the 3x-over-budget checkpoint-tier workload
+fails to complete / loses to naive re-staging from the original file
+store, cost-modelled cross-pilot sibling reads fail to beat re-pulling
+from a simulated slow home store, the batched task engine misses its
+>=10^5 tasks/s and >=20x-over-per-CU throughput floor, or the chaos
+kill-one-of-N resilience storm loses data / fails to restore
+replication / exceeds 1.5x the fault-free wall time.
 """
 from __future__ import annotations
 
@@ -26,7 +28,7 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr6.json"
+DEFAULT_JSON = "BENCH_pr7.json"
 MULTIPILOT_MIN_SPEEDUP = 1.3
 CHECKPOINT_MIN_SPEEDUP = 1.0
 SESSION_MIN_SPEEDUP = 1.5
@@ -100,6 +102,10 @@ def _gate(records) -> None:
     # >= 20x the per-CU submission rate (details in bench_throughput)
     from benchmarks import bench_throughput
     bench_throughput.gate(records)
+    # PR 7: chaos-kill one of N pilots mid-KMeans — zero data loss,
+    # replication restored, >= 1 respawn, <= 1.5x fault-free wall time
+    from benchmarks import bench_resilience
+    bench_resilience.gate(records)
 
 
 def main() -> None:
@@ -107,9 +113,9 @@ def main() -> None:
                             bench_fig7_storage, bench_fig8_profiles,
                             bench_fig9_kmeans, bench_kernels,
                             bench_mapreduce, bench_multipilot,
-                            bench_roofline, bench_session,
-                            bench_throughput, bench_tiering,
-                            bench_train_step)
+                            bench_resilience, bench_roofline,
+                            bench_session, bench_throughput,
+                            bench_tiering, bench_train_step)
     from benchmarks import common
     quick = "--quick" in sys.argv
     json_path = _json_path(sys.argv)
@@ -126,6 +132,7 @@ def main() -> None:
         bench_checkpoint.run(quick=True)
         bench_session.run(quick=True)
         bench_throughput.run(quick=True)
+        bench_resilience.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -134,8 +141,8 @@ def main() -> None:
     for mod in (bench_fig6_startup, bench_fig7_storage, bench_fig8_profiles,
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
                 bench_mapreduce, bench_multipilot, bench_checkpoint,
-                bench_session, bench_throughput, bench_train_step,
-                bench_roofline):
+                bench_session, bench_throughput, bench_resilience,
+                bench_train_step, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

@@ -36,6 +36,8 @@ from repro.core.pilotdata import PilotDataService
 from repro.core.scheduling import (InterconnectModel, Link, LocalityPolicy,
                                    LocalityWeights, SchedulingPolicy)
 from repro.core.session import PilotSession
+from repro.core.supervisor import (Backoff, FailureDetector, PilotSupervisor,
+                                   RespawnEvent)
 from repro.core.taskengine import (DispatchQueue, Task, TaskBatch,
                                    TaskEngine, TaskError, WorkerPool,
                                    current_pilot)
@@ -59,4 +61,6 @@ __all__ = [
     # the high-throughput task engine (raptor-style batched dispatch)
     "TaskEngine", "TaskBatch", "Task", "TaskError", "WorkerPool",
     "DispatchQueue", "current_pilot",
+    # the supervision layer (self-healing sessions)
+    "PilotSupervisor", "FailureDetector", "Backoff", "RespawnEvent",
 ]

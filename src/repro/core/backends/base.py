@@ -50,6 +50,28 @@ class ComputeBackend:
             queue_depth=getattr(desc, "dispatch_queue_depth", 1024))
         return pilot
 
+    def health(self, pilot: PilotCompute) -> dict:
+        """One liveness sample for the failure detector (supervisor.py).
+
+        The contract every adaptor must honor: ``alive`` is the
+        substrate's own verdict (terminal pilot state == not alive),
+        ``last_heartbeat`` is a *monotonic* stamp advancing while the
+        pilot's worker loop runs, and ``busy`` distinguishes a pilot
+        stuck inside one long CU (straggler — suspect, never
+        phi-confirm dead) from one whose loop went silent.  Adaptors
+        with real remote agents override this with their own probe."""
+        from repro.core.pilot import State
+        state = pilot.state
+        return {
+            "pilot": pilot.id,
+            "state": getattr(state, "value", str(state)),
+            "alive": state == State.RUNNING,
+            "last_heartbeat": pilot.last_heartbeat,
+            "heartbeat_age_s": pilot.heartbeat_age(),
+            "busy": pilot.utilization > 0,
+            "queued": pilot._queue.qsize(),
+        }
+
     def release(self, pilot: PilotCompute) -> None:
         pilot.cancel()
 

@@ -58,6 +58,17 @@ class InProcessBackend(ComputeBackend):
         pilot.provision_time = time.time() - t0
         return pilot
 
+    def health(self, pilot: PilotCompute) -> dict:
+        # in-process pilots share our fate, so the base worker-loop
+        # heartbeat is the whole truth; annotate with the device lease so
+        # a supervisor can tell a released pilot from a dead one
+        h = super().health(pilot)
+        if pilot.mesh is not None:
+            with self._lock:
+                h["devices_leased"] = all(
+                    d.id in self._leased for d in pilot.mesh.devices.flat)
+        return h
+
     def release(self, pilot: PilotCompute) -> None:
         super().release(pilot)
         if pilot.mesh is not None:

@@ -46,13 +46,93 @@ class FaultPolicy:
     #                                            — only checkpoint survives
 
 
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One scheduled fault.  `at_s` is relative to the target pilot's own
+    start; actions:
+
+      * ``kill``  — the pilot's node dies: state -> FAILED, and (with
+        ``lose_memory``) its volatile tiers are wiped.  Permanent.
+      * ``stall`` — the pilot looks alive (state RUNNING) but its
+        heartbeat freezes for ``duration_s``: the grey failure the phi
+        detector exists for.  Heartbeats resume afterwards.
+      * ``slow``  — every CU pays an extra ``severity`` seconds while the
+        window is open (a degraded node, not a dead one).
+    """
+    at_s: float
+    action: str                  # "kill" | "stall" | "slow"
+    duration_s: float = 0.5      # stall/slow window length
+    severity: float = 0.05       # slow: extra seconds per CU
+
+    def __post_init__(self):
+        if self.action not in ("kill", "stall", "slow"):
+            raise ValueError(f"ChaosEvent: unknown action {self.action!r}")
+
+
+@dataclasses.dataclass
+class ChaosPolicy(FaultPolicy):
+    """FaultPolicy plus a schedule of pilot-level chaos.  Events apply to
+    the `target_index`-th pilot this backend provisions (0-based), so a
+    respawned replacement — provisioned later — is never re-targeted and
+    recovery can actually converge.  Events fire lazily from the pilot's
+    execute path and from every ``health()`` probe; no extra threads."""
+    events: tuple = ()           # Tuple[ChaosEvent, ...]
+    target_index: int = 0
+
+
 class SimulatedPilot(PilotCompute):
     def __init__(self, desc, mesh, policy: FaultPolicy):
         super().__init__(desc, mesh)
         self.policy = policy
         self._failed_once: set = set()
+        # chaos state: armed by the backend on the target pilot only
+        self.chaos_events: tuple = ()
+        self._chaos_origin = time.monotonic()
+        self._chaos_fired: set = set()
+        self._stall_frozen: Optional[float] = None
+        self._stall_until: float = 0.0
+        self._slow_until: float = 0.0
+        self._slow_severity: float = 0.0
+
+    # -- chaos -----------------------------------------------------------
+    def arm_chaos(self, events) -> None:
+        self.chaos_events = tuple(events)
+        self._chaos_origin = time.monotonic()
+
+    def _apply_chaos(self) -> None:
+        """Fire every due, unfired event.  Called from the execute path
+        and from each health() probe, so a kill lands even on an idle
+        pilot (the monitor's probe is what discovers the corpse)."""
+        if not self.chaos_events:
+            return
+        now = time.monotonic()
+        elapsed = now - self._chaos_origin
+        for i, ev in enumerate(self.chaos_events):
+            if i in self._chaos_fired or elapsed < ev.at_s:
+                continue
+            self._chaos_fired.add(i)
+            if ev.action == "kill":
+                self.state = State.FAILED
+                if self.policy.lose_memory and self.tier_manager is not None:
+                    self.tier_manager.lose_volatile()
+            elif ev.action == "stall":
+                self._stall_frozen = self._last_heartbeat
+                self._stall_until = now + ev.duration_s
+            elif ev.action == "slow":
+                self._slow_until = now + ev.duration_s
+                self._slow_severity = ev.severity
+
+    @property
+    def last_heartbeat(self) -> float:
+        # a stalled pilot's loop keeps running but its liveness signal
+        # freezes — exactly what a wedged remote agent looks like
+        if (self._stall_frozen is not None
+                and time.monotonic() < self._stall_until):
+            return self._stall_frozen
+        return self._last_heartbeat
 
     def _execute(self, cu: ComputeUnit):
+        self._apply_chaos()
         if (self.policy.fail_devices_at is not None
                 and self._completed >= self.policy.fail_devices_at
                 and self.state == State.RUNNING):
@@ -68,6 +148,8 @@ class SimulatedPilot(PilotCompute):
                 RuntimeError(f"pilot {self.id} lost its devices (simulated)"))
             cu.end_time = time.time()
             return
+        if time.monotonic() < self._slow_until:
+            time.sleep(self._slow_severity)     # degraded-node tax per CU
         if cu.id in self.policy.straggle_cu_ids:
             # straggling CU occupies the pilot (visible to the scheduler's
             # utilization score and the straggler monitor)
@@ -85,8 +167,6 @@ class SimulatedPilot(PilotCompute):
             cu.future.set_exception(
                 RuntimeError(f"CU {cu.id} failed (simulated)"))
             cu.end_time = time.time()
-            with self._lock:
-                self._completed += 1
             return
         super()._execute(cu)
 
@@ -99,6 +179,7 @@ class SimulatedClusterBackend(ComputeBackend):
         self.substrate = substrate
         self.policy = policy or FaultPolicy()
         self.use_devices = use_devices
+        self._provisioned = 0    # chaos targeting is by provision order
 
     def provision(self, desc: PilotComputeDescription) -> PilotCompute:
         t0 = time.time()
@@ -120,9 +201,22 @@ class SimulatedClusterBackend(ComputeBackend):
         # same shared worker-pool provisioning as inprocess: simulated
         # pilots serve the batched task engine too (fault tests drive it)
         self.attach_worker_pool(pilot, desc)
+        # chaos schedule applies to exactly the target_index-th provision:
+        # the replacement pilot a supervisor respawns is NOT re-targeted
+        if (isinstance(self.policy, ChaosPolicy) and self.policy.events
+                and self._provisioned == self.policy.target_index):
+            pilot.arm_chaos(self.policy.events)
+        self._provisioned += 1
         pilot.start()
         pilot.provision_time = time.time() - t0
         return pilot
+
+    def health(self, pilot: PilotCompute) -> dict:
+        # fire due chaos first, so the probe itself discovers a scheduled
+        # kill/stall even when no CU has touched the pilot
+        if isinstance(pilot, SimulatedPilot):
+            pilot._apply_chaos()
+        return super().health(pilot)
 
 
 register_backend(SimulatedClusterBackend())

@@ -315,7 +315,7 @@ class DataUnit:
         """Stage every partition into another tier (paper: stage-in/out)."""
         if tier == self.tier:
             return self
-        t0 = time.time()
+        t0 = time.perf_counter()
         moved = 0
         if self.tier_manager is not None:
             tm = self.tier_manager
@@ -337,7 +337,7 @@ class DataUnit:
                 old, self.tier = self.tier, tier
         self.transfer_log.append({
             "from": old, "to": tier, "bytes": moved,
-            "seconds": time.time() - t0})
+            "seconds": time.perf_counter() - t0})
         return self
 
     def to_tier_async(self, tier: str) -> List[Future]:

@@ -43,6 +43,7 @@ from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
 from repro.core.scheduling import (LocalityPolicy, SchedulingPolicy,  # noqa: F401
                                    W_AFFINITY, W_CKPT, W_DEVICE, W_HOST,
                                    W_LOCAL, W_QUEUE)
+from repro.core.supervisor import POLL_BACKOFF, RETRY_BACKOFF
 
 
 class PilotComputeService:
@@ -115,24 +116,38 @@ class ComputeDataManager:
         benchmarks call manager.score directly)."""
         return self.policy.score(pilot, cu_desc)
 
+    def eligible_pilots(self, exclude: frozenset = frozenset()
+                        ) -> List[PilotCompute]:
+        """Healthy, non-excluded, non-quarantined pilots — the one filter
+        every placement path shares.  Quarantine (supervisor suspicion)
+        fails closed: an empty result makes late binding WAIT, it never
+        falls back onto a suspect pilot."""
+        pilots = [p for p in self.service.healthy_pilots()
+                  if p.id not in exclude]
+        return self.policy.eligible(pilots)
+
     def _select_scored(self, cu_desc: ComputeUnitDescription,
                        timeout: float = 30.0,
                        exclude: frozenset = frozenset()
                        ) -> Tuple[PilotCompute, float]:
-        """Late binding: wait for a healthy pilot, return the best-scoring
-        one AND its score, so the submit path records the decision without
-        scoring the winner a second time (scoring scans every input DU's
-        partitions — the recompute scaled with pilots x DUs x parts)."""
-        t0 = time.time()
+        """Late binding: wait for an eligible pilot, return the best-
+        scoring one AND its score, so the submit path records the decision
+        without scoring the winner a second time (scoring scans every
+        input DU's partitions — the recompute scaled with pilots x DUs x
+        parts).  The wait uses a monotonic deadline (wall-clock jumps
+        can't expire it early) and jittered backoff (a fleet of blocked
+        submitters doesn't stampede the registry in lockstep)."""
+        deadline = time.monotonic() + timeout
+        attempt = 0
         while True:
-            pilots = [p for p in self.service.healthy_pilots()
-                      if p.id not in exclude]
+            pilots = self.eligible_pilots(exclude)
             if pilots:
                 return self.policy.select(pilots, cu_desc)
-            if time.time() - t0 > timeout:
-                raise TimeoutError("no healthy pilot available (late binding "
-                                   "timed out)")
-            time.sleep(0.01)
+            if time.monotonic() > deadline:
+                raise TimeoutError("no eligible pilot available (late "
+                                   "binding timed out)")
+            POLL_BACKOFF.sleep(attempt)
+            attempt += 1
 
     def select_pilot(self, cu_desc: ComputeUnitDescription,
                      timeout: float = 30.0,
@@ -292,14 +307,18 @@ class ComputeDataManager:
                           timeout: Optional[float] = None):
         """Run a CU to completion, transparently resubmitting on CU/pilot
         failure (task-level fault tolerance; pilot-level recovery lives in
-        repro.runtime.fault_tolerance). Each retry re-runs late binding
-        with every pilot that already failed this CU *excluded*, so a
-        retry cannot late-bind straight back onto the pilot that just
+        the supervisor — repro.core.supervisor). Each retry re-runs late
+        binding with every pilot that already failed this CU *excluded*,
+        so a retry cannot late-bind straight back onto the pilot that just
         failed; when every healthy pilot has failed it, the exclusion
-        resets rather than stranding the CU."""
+        resets rather than stranding the CU.  Retries back off with
+        bounded exponential + jitter (immediate resubmission against a
+        fleet that just lost a node only amplifies the failure)."""
         last: Optional[Exception] = None
         exclude: set = set()
-        for _ in range(retries + 1):
+        for attempt in range(retries + 1):
+            if attempt > 0:
+                RETRY_BACKOFF.sleep(attempt - 1)
             healthy = {p.id for p in self.service.healthy_pilots()}
             if healthy and healthy <= exclude:
                 exclude.clear()

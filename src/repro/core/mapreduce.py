@@ -58,6 +58,7 @@ import numpy as np
 from repro.core.data import DataUnit
 from repro.core.manager import ComputeDataManager
 from repro.core.pilot import ComputeUnitDescription, PilotCompute
+from repro.core.supervisor import RETRY_BACKOFF
 
 # upper bound on waiting for one in-flight prefetch before falling back to
 # reading the partition wherever it currently resides
@@ -279,8 +280,11 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
             # surviving pilots; their reads pull the data back through the
             # PilotDataService fetch chain (live replicas, then the
             # durable checkpoint home), so a mid-run pilot death costs a
-            # lazy restore, not the job
-            healthy = {p.id for p in manager.service.healthy_pilots()}
+            # lazy restore, not the job.  Back off first (bounded, with
+            # jitter): re-submitting the instant a pilot died races the
+            # supervisor's quarantine and stampedes the survivors.
+            RETRY_BACKOFF.sleep(attempt)
+            healthy = {p.id for p in manager.eligible_pilots()}
             if not healthy:
                 raise last_error
             exclude = (frozenset(failed_pilots) if healthy - failed_pilots
@@ -356,7 +360,7 @@ def _partition_groups(du: DataUnit, manager: ComputeDataManager,
     restricts the split to a subset (the retry path's failed residue)."""
     idx = (list(range(du.num_partitions)) if indices is None
            else list(indices))
-    n_workers = max(1, len(manager.service.healthy_pilots()))
+    n_workers = max(1, len(manager.eligible_pilots()))
     n_groups = max(1, min(len(idx), n_workers))
     bounds = np.linspace(0, len(idx), n_groups + 1).astype(int)
     return [idx[bounds[g]:bounds[g + 1]]
@@ -381,9 +385,8 @@ def _replica_groups(du: DataUnit, manager: ComputeDataManager,
     pds = getattr(du, "pilot_data_service", None)
     if pds is None:
         return None
-    pilots = [p for p in manager.service.healthy_pilots()
-              if p.id not in exclude
-              and getattr(p, "tier_manager", None) is not None
+    pilots = [p for p in manager.eligible_pilots(exclude)
+              if getattr(p, "tier_manager", None) is not None
               and pds.knows(p.id)]
     if not pilots:
         return None

@@ -27,6 +27,10 @@ import numpy as np
 # PilotComputeDescription(prebind_wait_s=...) / PilotSession(prebind_wait_s=.)
 _PREBIND_WAIT_S = 120.0
 
+# the worker loop stamps a heartbeat at least this often even when the CU
+# queue is empty (the failure detector's liveness signal; see supervisor.py)
+_HEARTBEAT_TICK_S = 0.05
+
 
 class State(str, enum.Enum):
     NEW = "New"
@@ -279,8 +283,14 @@ class PilotCompute:
         self._jit_cache: Dict[Any, Callable] = {}
         self._running = 0
         self._completed = 0
+        self._pending = 0            # CUs accepted but not yet finished
         self._lock = threading.Lock()
+        self._idle_cond = threading.Condition(self._lock)
         self._worker: Optional[threading.Thread] = None
+        # liveness stamp (monotonic): beaten by the worker loop every tick
+        # and by task-engine chunks; the supervisor's failure detector reads
+        # it through ComputeBackend.health()
+        self._last_heartbeat: float = time.monotonic()
         self.provision_time: float = 0.0
         self.failed_devices: set = set()   # runtime fault injection target
         # the pilot's retained in-memory resources (Pilot-Data Memory): a
@@ -300,13 +310,47 @@ class PilotCompute:
 
     def _run_loop(self):
         while True:
-            cu = self._queue.get()
+            try:
+                cu = self._queue.get(timeout=_HEARTBEAT_TICK_S)
+            except queue.Empty:
+                self.beat()           # idle liveness: still here, just bored
+                continue
             if cu is None:
                 break
             if cu.state == State.CANCELED:
+                self._cu_finished(ran=False)
                 continue
-            self._execute(cu)
+            try:
+                self._execute(cu)
+            finally:
+                self._cu_finished(ran=True)
         self.state = State.DONE
+
+    def _cu_finished(self, ran: bool = True):
+        """Retire one accepted CU and wake idle-waiters when the last one
+        drains.  Lives here (not in _execute) so backend overrides with
+        early-return paths can't leak the pending count."""
+        with self._idle_cond:
+            self._pending -= 1
+            if ran:
+                self._completed += 1
+            if self._pending == 0:
+                self._idle_cond.notify_all()
+        self.beat()
+
+    # -- liveness --------------------------------------------------------
+    def beat(self) -> None:
+        """Stamp the heartbeat (monotonic).  Called from the worker loop's
+        idle tick, from CU retirement, and from task-engine chunk
+        boundaries; a chaos 'stall' fault freezes it."""
+        self._last_heartbeat = time.monotonic()
+
+    @property
+    def last_heartbeat(self) -> float:
+        return self._last_heartbeat
+
+    def heartbeat_age(self) -> float:
+        return max(0.0, time.monotonic() - self.last_heartbeat)
 
     def _execute(self, cu: ComputeUnit):
         cu.state = State.RUNNING
@@ -350,14 +394,19 @@ class PilotCompute:
             cu.end_time = time.time()
             with self._lock:
                 self._running -= 1
-                self._completed += 1
 
     # ------------------------------------------------------------------
     def submit_cu(self, cu: ComputeUnit) -> ComputeUnit:
         cu.state = State.PENDING
         cu.submit_time = time.time()
         cu.pilot_id = self.id
-        self._queue.put(cu)
+        with self._lock:
+            self._pending += 1
+        try:
+            self._queue.put(cu)
+        except BaseException:
+            self._cu_finished(ran=False)
+            raise
         return cu
 
     def jit_cached(self, key, build: Callable[[], Callable]) -> Callable:
@@ -383,7 +432,7 @@ class PilotCompute:
     @property
     def utilization(self) -> float:
         with self._lock:
-            u = self._running + self._queue.qsize()
+            u = self._pending           # accepted CUs: queued + running
         pool = self.worker_pool
         if pool is not None:
             u += pool.queue.depth       # engine backlog counts as load
@@ -402,13 +451,18 @@ class PilotCompute:
         self.state = State.CANCELED if self.state != State.DONE else self.state
 
     def wait_idle(self, timeout: float = 60.0):
-        t0 = time.time()
-        while time.time() - t0 < timeout:
-            with self._lock:
-                if self._running == 0 and self._queue.qsize() == 0:
-                    return True
-            time.sleep(0.005)
-        return False
+        """Block until every accepted CU has retired (queued + running ==
+        0).  Event-driven: CU retirement notifies the condition, so the
+        wait wakes immediately instead of on a poll tick; the deadline is
+        monotonic, immune to wall-clock jumps."""
+        deadline = time.monotonic() + timeout
+        with self._idle_cond:
+            while self._pending > 0:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._idle_cond.wait(remaining)
+            return True
 
     def __repr__(self):
         dev = self.mesh.devices.size if self.mesh is not None else 0

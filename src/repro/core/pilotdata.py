@@ -91,7 +91,15 @@ class PilotDataService:
         self.counters: Dict[str, int] = {
             "replications": 0, "pulls": 0, "invalidations": 0,
             "replicate_refused": 0, "checkpoint_restores": 0, "persists": 0,
-            "sibling_reads": 0, "home_reads": 0}
+            "sibling_reads": 0, "home_reads": 0, "repairs": 0}
+        # replication-factor repair (PR 7): per-DU target replica counts,
+        # the supervisor-driven avoid set (quarantined pilots are never
+        # read from NOR repaired onto), and the background repair worker
+        self._repl_targets: Dict[str, tuple] = {}     # du.name -> (du, n)
+        self._avoid: Set[str] = set()
+        self._repair_thread: Optional[threading.Thread] = None
+        self._repair_stop = threading.Event()
+        self._repair_depth = 0
         # cost-modelled cross-pilot reads (repro.core.scheduling.
         # InterconnectModel): with a model attached, _fetch sources a
         # partition from the CHEAPEST modelled path — a sibling pilot's
@@ -140,11 +148,47 @@ class PilotDataService:
             for pids in self._replicas.values():
                 pids.discard(pilot_id)
 
-    def register(self, du, persist: bool = False):  # noqa: F821 - fwd ref
+    def register(self, du, persist: bool = False,
+                 replication: int = 0):  # noqa: F821 - fwd ref
+        """Bind a DataUnit to this service.  `replication` > 0 declares a
+        target replica count per partition: the background repair worker
+        (see `start_repair`) re-replicates any partition that falls below
+        it — e.g. after a pilot death wiped one copy — from surviving
+        replicas or the checkpoint home.  0 (the default) keeps the
+        historical demand-driven behavior: replicas appear only where
+        reads pull them."""
         du.pilot_data_service = self
         if persist:
             self.persist(du)
+        if replication > 0:
+            with self._lock:
+                self._repl_targets[du.name] = (du, int(replication))
         return du
+
+    # -- supervisor liveness filter --------------------------------------
+    def avoid_pilot(self, pilot_id: str) -> None:
+        """Quarantine a pilot for data sourcing: fetches and repair stop
+        reading from (and repairing onto) its replicas until readmitted.
+        The registry itself is untouched — if the pilot recovers, its
+        replicas are still valid."""
+        with self._lock:
+            self._avoid.add(pilot_id)
+
+    def readmit_pilot(self, pilot_id: str) -> None:
+        with self._lock:
+            self._avoid.discard(pilot_id)
+
+    @property
+    def avoided(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._avoid)
+
+    def live_holders(self, key: str) -> List[str]:
+        """`holders` minus the quarantined pilots — the only holder list
+        repair and cost planning may source from."""
+        with self._lock:
+            avoid = set(self._avoid)
+        return [pid for pid in self.holders(key) if pid not in avoid]
 
     # -- durable home ----------------------------------------------------
     def persist(self, du, parts: Optional[Sequence[int]] = None,
@@ -331,6 +375,143 @@ class PilotDataService:
                 continue
         return out
 
+    # -- replication-factor repair ---------------------------------------
+    def _live_replicas(self, du, i: int) -> List[str]:
+        """Pilots verifiably holding partition `i` right now: registered,
+        not quarantined, and their TierManager still has the bytes (a
+        registry entry can outlive the data after lose_volatile)."""
+        key = du._key(i)
+        out: List[str] = []
+        for pid in self.live_holders(key):
+            tm = self._managers.get(pid)
+            if tm is None or getattr(tm, "_lost", False):
+                continue
+            if tm.tier_of(key) is not None:
+                out.append(pid)
+        return out
+
+    def under_replicated(self) -> List[tuple]:
+        """Every (du, partition, current, target) below its declared
+        replication target, given the pilots usable right now.  Targets
+        are clamped to the usable fleet size — 2 replicas on a 1-pilot
+        fleet is satisfied by 1, not permanently 'under'."""
+        with self._lock:
+            targets = list(self._repl_targets.values())
+            avoid = set(self._avoid)
+            usable = [pid for pid, tm in self._managers.items()
+                      if pid not in avoid and not getattr(tm, "_lost", False)]
+        out: List[tuple] = []
+        for du, target in targets:
+            eff = min(target, len(usable))
+            if eff <= 0:
+                continue
+            for i in range(du.num_partitions):
+                cur = len(self._live_replicas(du, i))
+                if cur < eff:
+                    out.append((du, i, cur, eff))
+        return out
+
+    def repair_partition(self, du, i: int, target: int,
+                         tier: str = "host") -> int:
+        """Bring partition `i` up to `target` live replicas, copying from
+        surviving replicas or the checkpoint home (never from a
+        quarantined pilot — the fetch path filters them).  New homes are
+        chosen cheapest-first by the InterconnectModel when one is
+        attached (re-replication is bulk traffic; it should ride the
+        cheap links), else in registration order.  Returns the number of
+        replicas created."""
+        cur = set(self._live_replicas(du, i))
+        need = target - len(cur)
+        if need <= 0:
+            return 0
+        with self._lock:
+            avoid = set(self._avoid)
+            cands = [pid for pid, tm in self._managers.items()
+                     if pid not in avoid and pid not in cur
+                     and not getattr(tm, "_lost", False)]
+        if not cands:
+            return 0
+        ic = self.interconnect
+        if ic is not None and cur:
+            nb = self.partition_nbytes(du, i)
+            cands.sort(key=lambda pid: min(
+                [ic.transfer_cost(src, pid, nb) for src in cur]
+                + [ic.home_cost(nb)]))
+        made = 0
+        key = du._key(i)
+        for pid in cands[:need]:
+            try:
+                landed = self.replicate(du, i, pid, tier)
+            except (CapacityError, KeyError, FileNotFoundError):
+                continue
+            made += 1
+            with self._lock:
+                self.counters["repairs"] += 1
+            self.events.append({"op": "repair", "key": key, "pilot": pid,
+                                "tier": landed})
+        return made
+
+    def repair_once(self) -> int:
+        """One repair sweep: re-replicate everything currently below
+        target.  Returns replicas created (0 = fully replicated)."""
+        work = self.under_replicated()
+        self._repair_depth = len(work)
+        made = 0
+        for du, i, _cur, target in work:
+            if self._repair_stop.is_set() and self._repair_thread is not None:
+                break
+            made += self.repair_partition(du, i, target)
+        self._repair_depth = len(self.under_replicated())
+        return made
+
+    def start_repair(self, interval_s: float = 0.1) -> "PilotDataService":
+        """Start the background repair worker (idempotent).  It sweeps
+        every `interval_s`, so detection-to-repair latency is bounded by
+        one interval plus copy time."""
+        if self._repair_thread is not None and self._repair_thread.is_alive():
+            return self
+        self._repair_stop.clear()
+
+        def _loop():
+            while not self._repair_stop.wait(interval_s):
+                try:
+                    self.repair_once()
+                except Exception:   # noqa: BLE001 - repair races teardown
+                    pass
+
+        self._repair_thread = threading.Thread(
+            target=_loop, daemon=True, name="pds-repair")
+        self._repair_thread.start()
+        return self
+
+    def stop_repair(self, timeout: float = 5.0) -> None:
+        self._repair_stop.set()
+        t = self._repair_thread
+        if t is not None:
+            t.join(timeout)
+        self._repair_thread = None
+
+    @property
+    def repair_queue_depth(self) -> int:
+        """Under-replicated partitions seen at the last repair sweep."""
+        return self._repair_depth
+
+    def replication_stats(self) -> Dict[str, dict]:
+        """Per-DU current-vs-target replication: partition -> live replica
+        count, the declared target, and how many partitions are below it."""
+        with self._lock:
+            targets = list(self._repl_targets.values())
+        out: Dict[str, dict] = {}
+        for du, target in targets:
+            per_part = {i: len(self._live_replicas(du, i))
+                        for i in range(du.num_partitions)}
+            out[du.name] = {
+                "target": target,
+                "per_partition": per_part,
+                "under": sum(1 for c in per_part.values() if c < target),
+            }
+        return out
+
     # -- reads -----------------------------------------------------------
     def read(self, du, i: int, pilot_id: str, device: bool = False,
              pull_tier: str = "device"):
@@ -408,7 +589,9 @@ class PilotDataService:
         the unpriced last resort either way."""
         key = du._key(i)
         ic = self.interconnect
-        sibs = [pid for pid in self.holders(key)
+        # quarantined pilots are never read from: a suspect's bytes may be
+        # mid-loss, and touching its TierManager can block on a dead node
+        sibs = [pid for pid in self.live_holders(key)
                 if pid != exclude and pid != dest]
         # (modelled cost, tiebreak, source pilot or None=home)
         if ic is not None and dest is not None and sibs:
@@ -539,6 +722,7 @@ class PilotDataService:
             if self._closed:
                 return
             self._closed = True
+        self.stop_repair()
         self._executor.shutdown(wait=True, cancel_futures=True)
         with self._lock:
             self._inflight.clear()

@@ -65,6 +65,12 @@ class LocalityWeights:
     sibling: float = W_SIBLING
 
 
+# guards lazy creation of per-policy quarantine state: SchedulingPolicy
+# deliberately has no __init__ (subclasses in the wild don't call super()),
+# so the set is attached on first use under this module lock instead
+_QUARANTINE_INIT_LOCK = threading.Lock()
+
+
 class SchedulingPolicy:
     """Strategy interface for CU-over-pilot placement.
 
@@ -72,9 +78,47 @@ class SchedulingPolicy:
     is the one call sites use: it returns BOTH the winning pilot and its
     score so the caller can record the decision without re-scoring
     (scoring scans every input DU's partitions, so on the submit hot path
-    it scales with pilots x DUs x partitions)."""
+    it scales with pilots x DUs x partitions).
+
+    Every policy additionally carries a *quarantine* set — pilot ids a
+    supervisor has marked suspect or dead.  ``eligible()`` filters them
+    out and is what every placement call site consults first; it fails
+    CLOSED (quarantining the whole fleet yields an empty eligible list,
+    making late binding wait for a respawn rather than routing work onto
+    a suspect).  Quarantine is reversible: ``readmit()`` lifts it when
+    heartbeats resume."""
 
     name = "policy"
+
+    # -- quarantine (supervisor-driven liveness filter) ------------------
+    def _qset(self) -> set:
+        q = getattr(self, "_quarantined", None)
+        if q is None:
+            with _QUARANTINE_INIT_LOCK:
+                q = getattr(self, "_quarantined", None)
+                if q is None:
+                    q = set()
+                    self._quarantined = q
+        return q
+
+    def quarantine(self, pilot_id: str) -> None:
+        """Exclude a pilot from placement until readmitted."""
+        self._qset().add(pilot_id)
+
+    def readmit(self, pilot_id: str) -> None:
+        self._qset().discard(pilot_id)
+
+    @property
+    def quarantined(self) -> frozenset:
+        return frozenset(self._qset())
+
+    def eligible(self, pilots: Sequence) -> List:
+        """`pilots` minus the quarantined ones.  Fails closed: may be
+        empty — the caller must wait/retry, never fall back to a suspect."""
+        q = self._qset()
+        if not q:
+            return list(pilots)
+        return [p for p in pilots if p.id not in q]
 
     def score(self, pilot, cu_desc) -> float:
         raise NotImplementedError

@@ -53,6 +53,7 @@ from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               PilotCompute, PilotComputeDescription)
 from repro.core.pilotdata import PilotDataService
 from repro.core.scheduling import InterconnectModel, SchedulingPolicy
+from repro.core.supervisor import PilotSupervisor
 
 
 class PilotSession:
@@ -69,13 +70,22 @@ class PilotSession:
         descriptions built from kwargs by `add_pilot` (an explicit
         description always wins).
     history_limit: bound on the scheduler's placement-history window.
+    supervise: True makes the session self-healing — a PilotSupervisor
+        monitor thread heartbeat-checks every pilot, quarantines suspects
+        before any task routes to them, respawns confirmed-dead pilots
+        from their own descriptions, and drives replication-factor repair
+        for DataUnits declared with `data(..., replication=n)`.  Extra
+        keyword knobs go through `supervisor_kwargs` (e.g.
+        ``supervisor_kwargs={"interval_s": 0.02}``).
     """
 
     def __init__(self, *, policy: Optional[SchedulingPolicy] = None,
                  interconnect: Optional[InterconnectModel] = None,
                  checkpoint_dir: Optional[str] = None,
                  prebind_wait_s: Optional[float] = None,
-                 history_limit: int = 1024, name: str = ""):
+                 history_limit: int = 1024, name: str = "",
+                 supervise: bool = False,
+                 supervisor_kwargs: Optional[dict] = None):
         self.name = name or f"session-{uuid.uuid4().hex[:8]}"
         self.interconnect = interconnect
         if policy is None:
@@ -94,6 +104,14 @@ class PilotSession:
         self._host_backend = make_backend("host")
         self._scratch: Optional[str] = None
         self._closed = False
+        self._supervisor: Optional[PilotSupervisor] = None
+        if supervise:
+            self._supervisor = PilotSupervisor(
+                self, **(supervisor_kwargs or {})).start()
+
+    @property
+    def supervisor(self) -> Optional[PilotSupervisor]:
+        return self._supervisor
 
     # -- lifecycle -------------------------------------------------------
     def __enter__(self) -> "PilotSession":
@@ -108,16 +126,21 @@ class PilotSession:
         return self._closed
 
     def close(self) -> None:
-        """Deterministic teardown, idempotent: (1) drain in-flight
-        replication and flush every checkpoint write (durability
-        barrier), (2) release the pilots — which closes each pilot's
-        TierManager: queued stages cancelled, in-flight ones landed,
-        stager threads joined — and (3) remove the session scratch
-        directory backing file-tier home placements (explicit `root=`
-        directories are the caller's and stay)."""
+        """Deterministic teardown, idempotent: (0) stop the supervisor
+        FIRST — its monitor thread joins here, so an in-flight respawn
+        finishes or aborts before teardown proceeds and the deliberate
+        releases below are never mistaken for deaths — then (1) drain
+        in-flight replication and flush every checkpoint write
+        (durability barrier), (2) release the pilots — which closes each
+        pilot's TierManager: queued stages cancelled, in-flight ones
+        landed, stager threads joined — and (3) remove the session
+        scratch directory backing file-tier home placements (explicit
+        `root=` directories are the caller's and stay)."""
         if self._closed:
             return
         self._closed = True
+        if self._supervisor is not None:
+            self._supervisor.close()
         self.data_service.drain(timeout=30)
         self.data_service.close()
         self.compute.cancel_all()
@@ -162,9 +185,30 @@ class PilotSession:
 
     def release(self, pilot: PilotCompute) -> None:
         """Release one pilot (its replicas leave the registry first, so
-        the scheduler stops crediting it immediately)."""
+        the scheduler stops crediting it immediately; the supervisor is
+        told to forget it first, so a deliberate release is never
+        mistaken for a death and respawned)."""
+        if self._supervisor is not None:
+            self._supervisor.forget(pilot.id)
         self.data_service.unregister_pilot(pilot.id)
         self.compute.release(pilot)
+
+    def respawn_pilot(self, dead: PilotCompute) -> PilotCompute:
+        """Replace a dead pilot with a fresh one provisioned from the
+        dead pilot's own description: the corpse's replicas leave the
+        registry and its resources are released (teardown of a FAILED
+        pilot is best-effort), then `add_pilot(dead.desc)` re-provisions
+        and re-registers the TierManager with the data service.  Raises
+        RuntimeError when the session is closed — the supervisor treats
+        that as an aborted respawn."""
+        if self._closed:
+            raise RuntimeError(f"{self.name} is closed")
+        self.data_service.unregister_pilot(dead.id)
+        try:
+            self.compute.release(dead)
+        except Exception:   # noqa: BLE001 - the corpse may be half-dead
+            self.compute.pilots.pop(dead.id, None)
+        return self.add_pilot(dead.desc)
 
     # -- data ------------------------------------------------------------
     def _scratch_dir(self) -> str:
@@ -174,6 +218,7 @@ class PilotSession:
 
     def data(self, name: str, array, parts: int = 1, *,
              tier: str = "host", affinity: str = "", persist: bool = False,
+             replication: int = 0,
              profile: Optional[TierProfile] = None,
              root: Optional[str] = None) -> DataUnit:
         """Create a partitioned DataUnit on the session's home backends
@@ -186,7 +231,10 @@ class PilotSession:
         with `profile` optionally simulating the home store's bandwidth —
         e.g. PROFILES["stampede_disk"] for a slow shared filesystem).
         `persist=True` additionally writes the partitions through to the
-        session's durable checkpoint home."""
+        session's durable checkpoint home.  `replication=n` declares a
+        target live-replica count per partition: the data service's
+        repair worker (started by a supervising session) re-replicates
+        any partition that falls below it after a pilot loss."""
         if self._closed:
             raise RuntimeError(f"{self.name} is closed")
         if name in self._data:
@@ -205,7 +253,8 @@ class PilotSession:
                              f"(have {sorted(backends)})")
         du = DataUnit.from_array(name, np.asarray(array), parts, backends,
                                  tier=tier, affinity=affinity)
-        self.data_service.register(du, persist=persist)
+        self.data_service.register(du, persist=persist,
+                                   replication=replication)
         self._data[name] = du
         return du
 
@@ -247,11 +296,17 @@ class PilotSession:
     # -- telemetry -------------------------------------------------------
     def stats(self) -> dict:
         """One merged view: scheduler lifetime stats, data-service
-        counters, and per-pilot tier residency."""
-        return {"session": self.name,
-                "scheduler": self.manager.stats(),
-                "data": dict(self.data_service.counters),
-                "pilots": self.data_service.stats()}
+        counters, per-pilot tier residency — and, when supervised, the
+        live recovery picture (heartbeat ages, suspicion levels, the
+        quarantine set, respawn events, repair-queue depth, and
+        per-partition current-vs-target replication)."""
+        out = {"session": self.name,
+               "scheduler": self.manager.stats(),
+               "data": dict(self.data_service.counters),
+               "pilots": self.data_service.stats()}
+        if self._supervisor is not None:
+            out["supervisor"] = self._supervisor.stats()
+        return out
 
     def __repr__(self) -> str:
         state = "closed" if self._closed else "open"

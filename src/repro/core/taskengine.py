@@ -55,6 +55,7 @@ from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.pilot import ComputeUnitDescription, State
+from repro.core.supervisor import POLL_BACKOFF, REBIND_BACKOFF
 
 # chunk granularity: one DispatchQueue condition pass hands this many tasks
 # to a worker (amortizes the queue hop to ~nothing per task while keeping
@@ -468,6 +469,8 @@ class WorkerPool:
         if batch is not None and n_ok:
             batch._done_n(n_ok)
         self.executed += len(chunk)
+        if pilot is not None and hasattr(pilot, "beat"):
+            pilot.beat()    # chunk boundary: the pool vouches for the pilot
 
     def _task_failed(self, t: Task, exc: BaseException) -> None:
         eng = self._engine
@@ -532,18 +535,24 @@ class TaskEngine:
         return pool
 
     def _healthy_pilots(self, timeout: float = 30.0) -> List:
-        """Late binding, batch edition: wait (bounded) for >= 1 healthy
-        pilot."""
+        """Late binding, batch edition: wait (bounded) for >= 1 healthy,
+        non-quarantined pilot.  The quarantine filter fails closed — a
+        fully-quarantined fleet makes the batch WAIT for the supervisor's
+        respawn instead of dispatching onto a suspect; the wait backs off
+        with jitter rather than hammering a fixed 10ms tick."""
         service = self.manager.service
-        t0 = time.monotonic()
+        policy = self.manager.policy
+        deadline = time.monotonic() + timeout
+        attempt = 0
         while True:
-            pilots = service.healthy_pilots()
+            pilots = policy.eligible(service.healthy_pilots())
             if pilots:
                 return pilots
-            if time.monotonic() - t0 > timeout:
-                raise TimeoutError("no healthy pilot available (late "
+            if time.monotonic() > deadline:
+                raise TimeoutError("no eligible pilot available (late "
                                    "binding timed out)")
-            time.sleep(0.01)
+            POLL_BACKOFF.sleep(attempt)
+            attempt += 1
 
     # -- submission ------------------------------------------------------
     def submit_tasks(self, items: Sequence, *, retries: int = 0,
@@ -625,7 +634,12 @@ class TaskEngine:
                 excl = t.exclude = set()
             if pilot is not None:
                 excl.add(pilot.id)
-            pilots = self.manager.service.healthy_pilots()
+            # bounded backoff before re-binding (attempt number == how
+            # many pilots have failed this task): an instant re-dispatch
+            # against a fleet that just lost a node stampedes survivors
+            REBIND_BACKOFF.sleep(max(0, len(excl) - 1))
+            pilots = self.manager.policy.eligible(
+                self.manager.service.healthy_pilots())
             cands = [p for p in pilots if p.id not in excl]
             if not cands and pilots:
                 excl.clear()

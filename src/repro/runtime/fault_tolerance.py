@@ -10,6 +10,17 @@ checkpoint. The ResilientRunner drives that loop:
   -> restore latest checkpoint with the new mesh's shardings (elastic)
   -> resume at the restored step
 
+Since PR 7 the detect/replace half of that loop is the supervision
+layer's (repro.core.supervisor): the runner holds a detect-only
+``PilotSupervisor`` (auto_respawn=False — the RUNNER owns when to
+re-provision, because it must restore checkpointed state before
+resuming) and delegates the release+re-provision step to
+``supervisor.replace_pilot``, so the same quarantine bookkeeping,
+respawn telemetry, and failure-detector math back both the step-loop
+recovery here and the self-healing ``PilotSession(supervise=True)``
+path.  The public surface (``run``, ``recoveries`` of RecoveryEvent) is
+unchanged.
+
 On a real multi-pod deployment the same logic runs in the launcher process
 per pod slice with jax.distributed; the simulated backend exercises every
 path deterministically on one host.
@@ -24,6 +35,7 @@ from repro.checkpoint.checkpoint import CheckpointManager
 from repro.core.manager import ComputeDataManager, PilotComputeService
 from repro.core.pilot import (ComputeUnitDescription, PilotCompute,
                               PilotComputeDescription, State)
+from repro.core.supervisor import PilotSupervisor
 
 
 @dataclasses.dataclass
@@ -51,11 +63,29 @@ class ResilientRunner:
         self.max_recoveries = max_recoveries
         self.pilot: Optional[PilotCompute] = None
         self.recoveries: list[RecoveryEvent] = []
+        # detect/quarantine-only supervisor: the runner decides WHEN to
+        # replace (it must restore state first), the supervisor supplies
+        # the replace primitive + quarantine bookkeeping.  No monitor
+        # thread is started — the step loop itself is the failure probe.
+        self.supervisor = PilotSupervisor(
+            compute=service, manager=self.manager, auto_respawn=False,
+            max_respawns=max_recoveries)
 
     def _ensure_pilot(self) -> PilotCompute:
         if self.pilot is None or self.pilot.state != State.RUNNING:
             self.pilot = self.service.submit_pilot(self.pilot_desc)
         return self.pilot
+
+    def _replace_pilot(self, dead: PilotCompute) -> PilotCompute:
+        """Release the corpse and re-provision through the supervision
+        layer (quarantine-during-replacement + respawn telemetry), with a
+        direct re-provision fallback if the supervisor already handled
+        this pilot id."""
+        new = self.supervisor.replace_pilot(dead, desc=self.pilot_desc)
+        if new is None:
+            new = self.service.submit_pilot(self.pilot_desc)
+        self.pilot = new
+        return new
 
     def run(self, state, step_fn: Callable, num_steps: int,
             batch_fn: Callable[[int], Any],
@@ -86,11 +116,9 @@ class ResilientRunner:
                 recoveries += 1
                 if recoveries > self.max_recoveries:
                     raise
-                t0 = time.time()
+                t0 = time.monotonic()
                 old_id = pilot.id if pilot else "?"
-                self.service.release(pilot)
-                self.pilot = None
-                new_pilot = self._ensure_pilot()
+                new_pilot = self._replace_pilot(pilot)
                 if restore_fn is not None:
                     state, restored = restore_fn(state)
                 else:
@@ -102,7 +130,8 @@ class ResilientRunner:
                         restored = start_step
                 self.recoveries.append(RecoveryEvent(
                     step=step, old_pilot=old_id, new_pilot=new_pilot.id,
-                    restored_step=restored, downtime_s=time.time() - t0))
+                    restored_step=restored,
+                    downtime_s=time.monotonic() - t0))
                 step = restored
         self.ckpt.wait()
         return state, metrics_log

@@ -1,0 +1,193 @@
+"""Zero-copy transport plane: view-vs-copy fetch bandwidth + steady state.
+
+The PR 8 tentpole gate.  Before the `Buf`/codec plane every fetch hop
+materialized a fresh copy, so partition fetch bandwidth was set by memcpy
+no matter how fast the serving tier was.  The plane now hands out
+read-only views (mmap'd files, aliasing host views, dlpack device views)
+and `copy_mode()` flips the SAME plane back into materialize-always reads
+— so both sides of every comparison here run in one process against one
+store, and the delta is exactly the memcpy the views elide.
+
+Records (gated under ``--quick`` here and again by ``run.py``):
+
+  * ``bench_transport.fetch`` — one >= 64 MiB file-tier partition,
+    fetched as a view vs as a copy.  The view fetch must show >= 3x the
+    copy fetch bandwidth (it is a header parse + page map; the copy is a
+    full payload memcpy).  A fetch+consume row (fetch then sum every
+    element) is recorded alongside for honesty: it includes the page
+    faults the view defers;
+  * ``bench_transport.mapreduce_steady`` — the pipelined map_reduce scan
+    from the PR 6/7 benches over a file-backed working set, zero-copy vs
+    copy mode.  Steady-state wall time must be no worse than the copy
+    baseline (ratio <= 1.15 + jitter floor) — the plane must never make
+    the existing benchmarks slower;
+  * transport counters (`bytes_viewed`/`bytes_copied`, per-codec counts)
+    ride along in the records, so the artifact shows the plane actually
+    served views.
+"""
+from __future__ import annotations
+
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, record
+
+PART_MIB = 64                      # the gate's "large partition" floor
+VIEW_MIN_SPEEDUP = 3.0             # view fetch vs copy fetch bandwidth
+STEADY_MAX_RATIO = 1.25            # zero-copy wall / copy-mode wall ceiling
+
+
+def _best(fn, repeats: int) -> float:
+    b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        b = min(b, time.perf_counter() - t0)
+    return b
+
+
+def _bench_fetch(workdir: Path, quick: bool) -> float:
+    from repro.core import DataUnit, copy_mode, make_backend
+
+    nbytes = PART_MIB * 2 ** 20
+    arr = np.arange(nbytes // 8, dtype=np.float64)
+    du = DataUnit.from_partitions(
+        "xfer", [arr], {"file": make_backend("file", root=workdir / "fetch")},
+        tier="file")
+    repeats = 5 if quick else 10
+    # warm the page cache first: the comparison is view-vs-memcpy, not
+    # cold-disk-vs-warm-disk
+    with copy_mode():
+        np.asarray(du.partition(0))
+
+    t_view = _best(lambda: du.partition(0), repeats)
+
+    def _copy_fetch():
+        with copy_mode():
+            du.partition(0)
+    t_copy = _best(_copy_fetch, repeats)
+
+    # fetch + consume: sum every element, so the view side pays its
+    # deferred page faults inside the timer
+    t_view_use = _best(lambda: float(np.sum(du.partition(0))), repeats)
+
+    def _copy_use():
+        with copy_mode():
+            float(np.sum(du.partition(0)))
+    t_copy_use = _best(_copy_use, repeats)
+
+    gbps = lambda t: nbytes / max(t, 1e-9) / 2 ** 30   # noqa: E731
+    speedup = t_copy / max(t_view, 1e-9)
+    use_ratio = t_view_use / max(t_copy_use, 1e-9)
+    emit("bench_transport.view_fetch", t_view,
+         f"{gbps(t_view):,.1f}GiB/s part={PART_MIB}MiB")
+    emit("bench_transport.copy_fetch", t_copy,
+         f"{gbps(t_copy):,.1f}GiB/s speedup={speedup:.1f}x")
+    emit("bench_transport.fetch_consume", t_view_use,
+         f"view/copy={use_ratio:.2f}")
+    record("bench_transport.fetch",
+           part_mib=PART_MIB,
+           view_seconds=t_view, copy_seconds=t_copy,
+           view_gib_s=gbps(t_view), copy_gib_s=gbps(t_copy),
+           speedup=speedup,
+           consume_view_seconds=t_view_use,
+           consume_copy_seconds=t_copy_use)
+    return speedup
+
+
+def _bench_mapreduce_steady(workdir: Path, quick: bool) -> float:
+    import jax.numpy as jnp
+
+    from repro.core import DataUnit, copy_mode, make_backend, map_reduce
+    from repro.core.buf import STATS
+
+    parts = 16 if quick else 32
+    part_elems = (4 * 2 ** 20) // 8          # 4 MiB per partition
+    pts = np.arange(parts * part_elems, dtype=np.float64)
+    du = DataUnit.from_array(
+        "steady", pts, parts,
+        {"file": make_backend("file", root=workdir / "steady"),
+         "host": make_backend("host")},
+        tier="file")
+    map_fn = lambda x: jnp.sum(x)            # noqa: E731
+    red = lambda a, b: a + b                 # noqa: E731
+    expect = float(np.sum(pts))
+
+    def _scan():
+        got = float(map_reduce(du, map_fn, red, pipeline=True))
+        assert abs(got - expect) <= 1e-6 * abs(expect)
+
+    _scan()                                  # warm jit + page cache
+    repeats = 3 if quick else 5
+    STATS.reset()
+    t_view = _best(_scan, repeats)
+    snap = STATS.snapshot()
+
+    def _copy_scan():
+        with copy_mode():
+            _scan()
+    _copy_scan()
+    t_copy = _best(_copy_scan, repeats)
+
+    ratio = t_view / max(t_copy, 1e-9)
+    emit("bench_transport.mapreduce_steady", t_view,
+         f"view/copy={ratio:.2f} parts={parts}")
+    record("bench_transport.mapreduce_steady",
+           parts=parts, view_seconds=t_view, copy_seconds=t_copy,
+           ratio_vs_copy=ratio,
+           bytes_viewed=snap["bytes_viewed"],
+           bytes_copied=snap["bytes_copied"],
+           codec=snap["codec"])
+    return ratio
+
+
+def run(quick: bool = False) -> None:
+    root = Path(tempfile.mkdtemp(prefix="bench_transport_"))
+    try:
+        _bench_fetch(root, quick)
+        _bench_mapreduce_steady(root, quick)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def gate(records) -> None:
+    """The PR 8 guardrails (also wired into run.py's --quick gate)."""
+    rows = {r["name"]: r for r in records}
+    f = rows.get("bench_transport.fetch")
+    if f is None:
+        print("bench gate: no bench_transport.fetch record", file=sys.stderr)
+        raise SystemExit(1)
+    if f.get("part_mib", 0) < 64:
+        print(f"bench gate: fetch partition only {f.get('part_mib')}MiB "
+              "(gate requires >= 64MiB)", file=sys.stderr)
+        raise SystemExit(1)
+    if f.get("speedup", 0.0) < VIEW_MIN_SPEEDUP:
+        print(f"bench gate: view fetch only {f.get('speedup'):.1f}x the "
+              f"copy fetch (target {VIEW_MIN_SPEEDUP}x)", file=sys.stderr)
+        raise SystemExit(1)
+    m = rows.get("bench_transport.mapreduce_steady")
+    if m is None:
+        print("bench gate: no bench_transport.mapreduce_steady record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if m.get("ratio_vs_copy", float("inf")) > STEADY_MAX_RATIO:
+        print(f"bench gate: zero-copy steady-state map_reduce "
+              f"{m.get('ratio_vs_copy'):.2f}x the copy-mode wall "
+              f"(ceiling {STEADY_MAX_RATIO}x)", file=sys.stderr)
+        raise SystemExit(1)
+    if not m.get("bytes_viewed", 0):
+        print("bench gate: steady-state run served zero view bytes "
+              "(the zero-copy plane is not engaged)", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    from benchmarks import common
+    print("name,us_per_call,derived")
+    run(quick="--quick" in sys.argv)
+    gate(common.records())

@@ -6,7 +6,8 @@ evictions) to a JSON artifact (default ``BENCH_pr7.json``; override with
 ``--json PATH``) so the perf trajectory is tracked across PRs.
 
 ``--quick`` is the CI smoke path: it runs the tiering, map_reduce,
-multi-pilot, checkpoint, session, throughput, and resilience benches,
+multi-pilot, checkpoint, session, throughput, resilience, and transport
+benches,
 writes the artifact, and exits non-zero if the pipelined map_reduce
 engine is slower than the sequential baseline, the 2-pilot distributed
 Pilot-Data run is below 1.3x the single-pilot wall clock on the
@@ -16,7 +17,9 @@ store, cost-modelled cross-pilot sibling reads fail to beat re-pulling
 from a simulated slow home store, the batched task engine misses its
 >=10^5 tasks/s and >=20x-over-per-CU throughput floor, or the chaos
 kill-one-of-N resilience storm loses data / fails to restore
-replication / exceeds 1.5x the fault-free wall time.
+replication / exceeds 1.5x the fault-free wall time, or the zero-copy
+plane misses its >= 3x view-over-copy fetch floor / regresses the
+steady-state map_reduce past the copy-mode baseline.
 """
 from __future__ import annotations
 
@@ -28,7 +31,7 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr7.json"
+DEFAULT_JSON = "BENCH_pr8.json"
 MULTIPILOT_MIN_SPEEDUP = 1.3
 CHECKPOINT_MIN_SPEEDUP = 1.0
 SESSION_MIN_SPEEDUP = 1.5
@@ -106,6 +109,10 @@ def _gate(records) -> None:
     # replication restored, >= 1 respawn, <= 1.5x fault-free wall time
     from benchmarks import bench_resilience
     bench_resilience.gate(records)
+    # PR 8: the zero-copy plane — view fetch >= 3x copy fetch on >= 64MiB
+    # partitions, steady-state map_reduce no worse than the copy baseline
+    from benchmarks import bench_transport
+    bench_transport.gate(records)
 
 
 def main() -> None:
@@ -115,7 +122,8 @@ def main() -> None:
                             bench_mapreduce, bench_multipilot,
                             bench_resilience, bench_roofline,
                             bench_session, bench_throughput,
-                            bench_tiering, bench_train_step)
+                            bench_tiering, bench_train_step,
+                            bench_transport)
     from benchmarks import common
     quick = "--quick" in sys.argv
     json_path = _json_path(sys.argv)
@@ -133,6 +141,7 @@ def main() -> None:
         bench_session.run(quick=True)
         bench_throughput.run(quick=True)
         bench_resilience.run(quick=True)
+        bench_transport.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -142,7 +151,7 @@ def main() -> None:
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
                 bench_mapreduce, bench_multipilot, bench_checkpoint,
                 bench_session, bench_throughput, bench_resilience,
-                bench_train_step, bench_roofline):
+                bench_transport, bench_train_step, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

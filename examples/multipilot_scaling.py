@@ -60,6 +60,14 @@ def main():
             np.zeros_like(np.asarray(du.partition(0))))
         print("replica read after invalidation is coherent")
 
+        # the zero-copy plane metered every one of those reads: views are
+        # free aliases, copies are the memcpys the plane could not elide
+        t = s.stats()["transport"]
+        print(f"transport: {t['bytes_viewed'] / 2**20:.1f} MiB viewed "
+              f"({t['views']} views) vs "
+              f"{t['bytes_copied'] / 2**20:.1f} MiB copied "
+              f"({t['copies']} copies), codec calls={t['codec']}")
+
 
 if __name__ == "__main__":
     main()

@@ -23,6 +23,11 @@ v1 (the composable objects underneath — still public, still supported):
     cu.result()
 """
 from repro.core.analytics import KMeansResult, assign_partial, kmeans, make_blobs
+from repro.core.buf import (Buf, STATS as TRANSPORT_STATS, copy_mode,
+                            set_zero_copy, zero_copy_enabled)
+from repro.core.codecs import (Codec, PickleCodec, RawCodec, decode_file,
+                               encoder_for, file_nbytes, register_codec,
+                               unregister_codec)
 from repro.core.data import DataUnit, DataUnitDescription
 from repro.core.manager import ComputeDataManager, PilotComputeService
 from repro.core.mapreduce import map_reduce
@@ -40,7 +45,7 @@ from repro.core.supervisor import (Backoff, FailureDetector, PilotSupervisor,
                                    RespawnEvent)
 from repro.core.taskengine import (DispatchQueue, Task, TaskBatch,
                                    TaskEngine, TaskError, WorkerPool,
-                                   current_pilot)
+                                   current_pilot, read_partition)
 from repro.core.tiering import (CapacityError, EvictionPolicy, GDSFPolicy,
                                 LRUPolicy, TierManager, make_policy,
                                 make_tier_manager)
@@ -60,7 +65,12 @@ __all__ = [
     "InterconnectModel", "Link",
     # the high-throughput task engine (raptor-style batched dispatch)
     "TaskEngine", "TaskBatch", "Task", "TaskError", "WorkerPool",
-    "DispatchQueue", "current_pilot",
+    "DispatchQueue", "current_pilot", "read_partition",
     # the supervision layer (self-healing sessions)
     "PilotSupervisor", "FailureDetector", "Backoff", "RespawnEvent",
+    # the zero-copy data plane (views, codecs, transport counters)
+    "Buf", "TRANSPORT_STATS", "copy_mode", "set_zero_copy",
+    "zero_copy_enabled", "Codec", "RawCodec", "PickleCodec",
+    "register_codec", "unregister_codec", "encoder_for", "decode_file",
+    "file_nbytes",
 ]

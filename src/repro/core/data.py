@@ -36,6 +36,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.core.buf import Buf, materialize, zero_copy_enabled
 from repro.core.memory import StorageBackend, TIERS
 from repro.core.tiering import TierManager
 
@@ -135,13 +136,15 @@ class DataUnit:
         return None
 
     def partition(self, i: int, pilot=None) -> np.ndarray:
+        """Partition bytes as a read-only ndarray view (zero-copy: the
+        serving tier's mmap/aliasing/dlpack view — see repro.core.buf).
+        Mutating callers take `partition_copy` instead."""
         pid = self._pilot_route(pilot)
         if pid is not None:
-            return np.asarray(
-                self.pilot_data_service.read(self, i, pid))
+            return self.pilot_data_service.read(self, i, pid)
         key = self._key(i)
         if self.tier_manager is not None:
-            return np.asarray(self.tier_manager.get(key))
+            return self.tier_manager.get(key)
         # a concurrent to_tier() moves copy-first/delete-last, so on a miss
         # the partition is guaranteed to exist in some other tier — retry
         for _ in range(8):
@@ -158,6 +161,25 @@ class DataUnit:
                     except (KeyError, FileNotFoundError):
                         continue
         raise KeyError(key)
+
+    def partition_buf(self, i: int, pilot=None) -> Buf:
+        """Like `partition`, wrapped in a `Buf` carrying provenance (which
+        tier/pilot served the bytes) — the view the pipelined stage-in and
+        worker-local read paths move end to end."""
+        pid = self._pilot_route(pilot)
+        if pid is not None:
+            arr = self.pilot_data_service.read(self, i, pid)
+            return Buf(arr, source=f"pilot:{pid}",
+                       owned=not zero_copy_enabled())
+        if self.tier_manager is not None:
+            return self.tier_manager.get_buf(self._key(i))
+        return Buf(self.partition(i), source=self.tier,
+                   owned=not zero_copy_enabled())
+
+    def partition_copy(self, i: int, pilot=None) -> np.ndarray:
+        """An owned, writable copy of partition `i` — the sanctioned path
+        for callers that mutate fetched bytes (records bytes_copied)."""
+        return materialize(self.partition(i, pilot=pilot))
 
     def partition_device(self, i: int, pilot=None) -> jax.Array:
         pid = self._pilot_route(pilot)
@@ -331,7 +353,7 @@ class DataUnit:
                 for i in range(self.num_partitions):
                     arr = src.get(self._key(i))
                     dst.put(self._key(i), arr)
-                    moved += int(np.asarray(arr).nbytes)
+                    moved += int(arr.nbytes)
                     if delete_source:
                         src.delete(self._key(i))
                 old, self.tier = self.tier, tier

@@ -194,7 +194,10 @@ def map_reduce(du: DataUnit, map_fn: Callable, reduce_fn: Callable,
     mfn = _jit_cached(map_fn) if jit_map else map_fn
 
     def compute(i):
-        return mfn(jnp.asarray(du.partition(i)), *extra_args)
+        # zero-copy stage-in (PR 8): partition_buf hands back the serving
+        # tier's read-only view; jnp.asarray consumes it directly, so the
+        # only copy in the pipeline is the host->device transfer itself
+        return mfn(jnp.asarray(du.partition_buf(i).view()), *extra_args)
 
     if manager is None:
         if pipeline:

@@ -40,6 +40,10 @@ from typing import Dict, Iterable, List, Optional
 import jax
 import numpy as np
 
+from repro.core import codecs as _codecs
+from repro.core.buf import (as_view, device_view, materialize,
+                            zero_copy_enabled)
+
 TIERS = ("checkpoint", "file", "object", "host", "device")
 
 # tiers whose contents survive pilot loss (TierManager.lose_volatile) —
@@ -128,25 +132,34 @@ class FileBackend(StorageBackend):
         # write-to-temp + atomic rename: a concurrent reader of an
         # overwritten key sees the old bytes or the new bytes, never a
         # truncated file (the either-tier-consistency the staging
-        # protocol promises ends at this backend's put)
+        # protocol promises ends at this backend's put).  The bytes are
+        # laid down by the codec registry (raw-header fast path for
+        # numeric arrays, pickle tail for object dtypes) so the format is
+        # pluggable without forking this transport.
         tmp = path.with_suffix(f".{os.getpid()}.{threading.get_ident()}.tmp")
         try:
-            with open(tmp, "wb") as f:      # np.save on a path would
-                np.save(f, value)           # re-append the .npy suffix
+            codec = _codecs.encoder_for(value)
+            with open(tmp, "wb") as f:
+                codec.write(f, value)
             os.replace(tmp, path)
         finally:
             tmp.unlink(missing_ok=True)
 
     def get(self, name: str) -> np.ndarray:
-        arr = np.load(self._path(name), mmap_mode=None)
+        """Read-only partition bytes.  Zero-copy by default: the raw
+        codec maps the file (``mmap_mode="r"``) instead of memcpy'ing the
+        payload, so fetch cost is a page-table update and the simulated
+        profile charge — a reader's live view pins the inode even across
+        a concurrent overwrite (``os.replace``) or delete."""
+        arr = _codecs.decode_file(self._path(name))
         self.profile.charge(arr.nbytes, write=False)
         return arr
 
     def nbytes(self, name: str) -> int:
-        # header-only read: sizing a partition (e.g. for interconnect cost
-        # modelling) must not charge the simulated bandwidth profile
-        arr = np.load(self._path(name), mmap_mode="r")
-        return int(arr.nbytes)
+        # header-only read (codec registry): sizing a partition (e.g. for
+        # interconnect cost modelling) must not charge the simulated
+        # bandwidth profile nor touch the payload pages
+        return _codecs.file_nbytes(self._path(name))
 
     def delete(self, name: str) -> None:
         self._path(name).unlink(missing_ok=True)
@@ -263,8 +276,9 @@ class CheckpointBackend(StorageBackend):
         path = self._path(key)
         path.parent.mkdir(parents=True, exist_ok=True)
         tmp = path.parent / (path.name + ".tmp")
-        with open(tmp, "wb") as f:     # file object: np.save must not
-            np.save(f, arr)            # append .npy to the tmp name
+        codec = _codecs.encoder_for(arr)
+        with open(tmp, "wb") as f:     # file object: the codec must not
+            codec.write(f, arr)        # append .npy to the tmp name
         with self._lock:
             if self._pending.get(key) is not arr:
                 tmp.unlink(missing_ok=True)   # deleted/replaced mid-write
@@ -316,8 +330,13 @@ class CheckpointBackend(StorageBackend):
             if arr is None and name not in self._manifest:
                 raise KeyError(name)
         if arr is not None:
-            return arr          # buffered write: a plain memory read
-        arr = np.load(self._path(name), mmap_mode=None)
+            # buffered write: a read-only aliasing view of the pending
+            # buffer — a reader must never scribble into bytes the writer
+            # thread is about to land
+            return as_view(arr)
+        # landed bytes: zero-copy restore (mmap'd raw fast path) — the
+        # checkpoint-restore hop no longer memcpy's the whole partition
+        arr = _codecs.decode_file(self._path(name))
         self.profile.charge(int(arr.nbytes), write=False)
         with self._lock:
             self.counters["reads"] += 1
@@ -431,7 +450,13 @@ class HostMemoryBackend(StorageBackend):
         with self._lock:
             arr = self._store[name]
         self.profile.charge(arr.nbytes, write=False)
-        return arr
+        # read-only aliasing view (copy mode: an owned copy — the
+        # pre-PR-8 baseline the transport bench measures against).  A
+        # demotion/overwrite/delete only drops the STORE's reference;
+        # a reader's live view keeps the old bytes alive and unchanged.
+        if zero_copy_enabled():
+            return as_view(arr)
+        return as_view(materialize(arr), count=False)
 
     def delete(self, name: str) -> None:
         with self._lock:
@@ -490,7 +515,15 @@ class DeviceBackend(StorageBackend):
     def get(self, name: str) -> np.ndarray:
         arr = self.get_device(name)
         self.profile.charge(arr.nbytes, write=False)
-        return np.asarray(arr)
+        if zero_copy_enabled():
+            # dlpack: a read-only host view straight over the device
+            # buffer when it is host-addressable (CPU jax, unified
+            # memory); None means real HBM — that tier crossing is a
+            # genuine copy and falls through
+            v = device_view(arr)
+            if v is not None:
+                return v
+        return as_view(materialize(arr), count=False)
 
     def delete(self, name: str) -> None:
         with self._lock:

@@ -67,6 +67,15 @@ from repro.core.tiering import CapacityError, TierManager
 _N_STRIPES = 32
 
 
+def _as_nd(val) -> np.ndarray:
+    """One conversion per hop: the fetch/replicate/persist plane already
+    carries ndarrays (read-only views since PR 8), so `np.asarray` is a
+    no-op for them — but routing every hop through this helper keeps the
+    \"convert at most once\" contract greppable and never re-materializes
+    a view that is already an ndarray."""
+    return val if isinstance(val, np.ndarray) else np.asarray(val)
+
+
 class PilotDataService:
     """Registry + mover for per-pilot DataUnit replicas.
 
@@ -209,7 +218,7 @@ class PilotDataService:
                 val = du.partition(i)
             except (KeyError, FileNotFoundError):
                 continue
-            store.put(du._key(i), np.asarray(val))
+            store.put(du._key(i), _as_nd(val))
             done.append(i)
         with self._lock:
             self.counters["persists"] += len(done)
@@ -316,7 +325,7 @@ class PilotDataService:
             val = self._fetch(du, i, exclude=pilot_id, dest=pilot_id)
             dst = tier if tier in tm.backends else tm.order[-1]
             try:
-                tm.put(key, np.asarray(val), dst)
+                tm.put(key, _as_nd(val), dst)
             except CapacityError:
                 with self._lock:
                     self.counters["replicate_refused"] += 1
@@ -540,8 +549,8 @@ class PilotDataService:
             val = self._fetch(du, i, dest=pilot_id)
             if device:
                 import jax
-                return jax.device_put(np.asarray(val))
-            return np.asarray(val)
+                return jax.device_put(_as_nd(val))
+            return _as_nd(val)
         except (KeyError, FileNotFoundError):
             # deleted while pulling: the home read gives the truth (and
             # raises KeyError if the partition is truly gone)
@@ -622,7 +631,10 @@ class PilotDataService:
             except (KeyError, FileNotFoundError):
                 continue
             if costed:
-                ic.charge(pid, dest, int(np.asarray(val).nbytes))
+                # size from the cost plan's header-only/metadata estimate —
+                # never re-materialize the (possibly mmap'd) value just to
+                # measure it; val is always an ndarray view here anyway
+                ic.charge(pid, dest, nbytes or int(val.nbytes))
                 with self._lock:
                     self.counters["sibling_reads"] += 1
                 self.events.append({"op": "sibling-read", "key": key,
@@ -682,7 +694,7 @@ class PilotDataService:
                         store.delete(key)
                     else:
                         try:
-                            store.put(key, np.asarray(du.partition(j)))
+                            store.put(key, _as_nd(du.partition(j)))
                         except (KeyError, FileNotFoundError):
                             store.delete(key)   # home gone: don't go stale
                 if dropped:

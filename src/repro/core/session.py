@@ -300,10 +300,14 @@ class PilotSession:
         live recovery picture (heartbeat ages, suspicion levels, the
         quarantine set, respawn events, repair-queue depth, and
         per-partition current-vs-target replication)."""
+        from repro.core.buf import STATS as _transport_stats
         out = {"session": self.name,
                "scheduler": self.manager.stats(),
                "data": dict(self.data_service.counters),
-               "pilots": self.data_service.stats()}
+               "pilots": self.data_service.stats(),
+               # process-wide data-plane movement: bytes served as
+               # zero-copy views vs bytes memcpy'd, per-codec counts
+               "transport": _transport_stats.snapshot()}
         if self._supervisor is not None:
             out["supervisor"] = self._supervisor.stats()
         return out

@@ -78,6 +78,22 @@ def current_pilot():
     return getattr(_tls, "pilot", None)
 
 
+def read_partition(du, i: int, device: bool = False):
+    """Worker-local zero-copy partition read for function tasks.
+
+    Inside a WorkerPool thread this routes the read through the executing
+    pilot's own tiers (per-pilot replica residency, heat recorded in THAT
+    pilot's TierManager); outside a pool it falls back to the DU's home
+    read.  Either way the bytes come back as the serving tier's read-only
+    view (mmap/aliasing/dlpack — repro.core.buf), so a task consuming the
+    partition pays no memcpy; tasks that mutate take
+    ``du.partition_copy(i)`` instead."""
+    pilot = current_pilot()
+    if device:
+        return du.partition_device(i, pilot=pilot)
+    return du.partition(i, pilot=pilot)
+
+
 class TaskError(RuntimeError):
     """Terminal engine-side task failure (pool closed, pilot lost with no
     retry budget left)."""

@@ -49,6 +49,16 @@ victims are fenced with the `_moving` marker while their bytes drain to
 the colder tier), so a throttled cold tier never serializes concurrent
 readers or stagers during reservation.
 
+Zero-copy plane (PR 8): backend reads hand out read-only *views*
+(mmap'd files, aliasing host views, dlpack device views — see
+repro.core.buf), so a move's get+put pipes a view straight into the
+destination encoder and the only memcpy in a demotion is the cold
+tier's own write.  Deleting the source after the flip only drops the
+store's reference: a reader's live view pins the backing bytes (numpy
+base / mmap'd inode / dlpack capsule), so demotion and eviction can
+never mutate data under a reader.  `get_buf` returns the same view
+wrapped with provenance.
+
 Multi-pilot note: one TierManager manages ONE pilot's tiers.  Cross-pilot
 replication and coherence live a layer up in
 repro.core.pilotdata.PilotDataService, which owns the mapping from
@@ -65,6 +75,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.buf import Buf, zero_copy_enabled
 from repro.core.memory import (DEFAULT_TIER_BANDWIDTH, DURABLE_TIERS,
                                StorageBackend, TIERS)
 
@@ -670,6 +681,19 @@ class TierManager:
             except (KeyError, FileNotFoundError):
                 continue
         raise KeyError(key)
+
+    def get_buf(self, key: str) -> Buf:
+        """Like `get`, but wraps the read-only view in a `Buf` carrying
+        provenance (the tier the bytes were served from) and ownership.
+        Since the backends hand out views under zero-copy and owned
+        copies in copy mode, no extra bytes move here."""
+        e = self._entries.get(key)      # snapshot; staleness tolerated
+        tier = e.tier if e else None
+        val = self.get(key)
+        if tier is None:
+            tier = self.tier_of(key)
+        return Buf(val, source=tier or "?",
+                   owned=not zero_copy_enabled())
 
     def get_device(self, key: str):
         """Device-resident handle if HBM holds the key; else staged read."""

@@ -147,6 +147,47 @@ def test_close_leaves_no_orphan_checkpoint_files(ops):
         shutil.rmtree(root, ignore_errors=True)
 
 
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(st.integers(0, 10_000), min_size=1, max_size=40))
+def test_reader_views_never_mutated_by_demotion_or_eviction(ops):
+    """PR 8 mutation contract: every read hands out a write-protected
+    view, and NO later plane activity — pressure demotions, evictions,
+    stages, overwrites, deletes, close — may change the bytes under a
+    reader's live view (moves are copy-first/delete-last; dropping a
+    source only drops the store's reference, the view pins the backing
+    bytes).  The cross-pilot repair path rides the same replicate ->
+    copy-first protocol and is covered in tests/test_transport.py."""
+    root = Path(tempfile.mkdtemp(prefix="tier_views_"))
+    budgets = {"device": 2 * KB, "host": 2 * KB}
+    store = CheckpointBackend(root / "ckpt")
+    tm = TierManager({"checkpoint": store,
+                      "host": make_backend("host"),
+                      "device": make_backend("device")},
+                     budgets, promote_threshold=0)
+    model = {}
+    held = []       # (live view, bytes it MUST keep showing)
+    try:
+        for n, op in enumerate(ops):
+            kind, key, _tier, _size = _decode(op)
+            if kind == 2 and key in model:
+                v = tm.get(key)
+                assert not v.flags.writeable, "plane read was writable"
+                held.append((v, model[key].copy()))
+            _apply(tm, model, op, n)
+            for v, expect in held:
+                np.testing.assert_array_equal(np.asarray(v), expect)
+        tm.close()
+        for v, expect in held:
+            np.testing.assert_array_equal(np.asarray(v), expect)
+            try:
+                v[...] = 0.0
+                raise AssertionError("held view accepted a write")
+            except ValueError:
+                pass
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 # -- dispatch-queue properties (the task engine's backpressure bound) -----
 from repro.core.taskengine import DispatchQueue
 

@@ -1,0 +1,288 @@
+"""The zero-copy data plane: Buf views, the codec registry, counters.
+
+Covers the PR 8 transport contract end to end:
+
+  * backend reads are read-only views (mmap'd FileBackend, aliasing
+    host views, dlpack device views) and `copy_mode()` flips the same
+    plane into materialize-always reads;
+  * the codec registry: raw fast path vs pickle tail, header-only
+    sizing, pluggable custom codecs;
+  * provenance-carrying reads (`TierManager.get_buf`,
+    `DataUnit.partition_buf`) and the sanctioned mutation path
+    (`Buf.copy()` / `DataUnit.partition_copy`);
+  * view stability across the moves that used to memcpy: demotion,
+    overwrite, delete, cross-pilot replication/repair;
+  * the `bytes_viewed`/`bytes_copied`/codec counters surfaced through
+    `session.stats()["transport"]`.
+"""
+import shutil
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (Buf, DataUnit, PilotDataService, PilotSession,
+                        TRANSPORT_STATS, copy_mode, decode_file, encoder_for,
+                        file_nbytes, make_backend, make_tier_manager,
+                        read_partition, register_codec, unregister_codec)
+from repro.core.buf import as_view, materialize, zero_copy_enabled
+from repro.core.codecs import Codec, PickleCodec, RawCodec
+
+
+@pytest.fixture()
+def tmpdir():
+    d = Path(tempfile.mkdtemp(prefix="transport_"))
+    yield d
+    shutil.rmtree(d, ignore_errors=True)
+
+
+# -- Buf / view primitives ------------------------------------------------
+def test_as_view_is_readonly_alias():
+    a = np.arange(10.0)
+    v = as_view(a)
+    assert v.base is a and not v.flags.writeable
+    a[0] = 42.0                         # the caller's array is untouched
+    assert v[0] == 42.0                 # ... and the view aliases it
+    with pytest.raises(ValueError):
+        v[0] = 0.0
+
+
+def test_materialize_is_owned_and_writable():
+    a = np.arange(10.0)
+    m = materialize(a)
+    assert m.base is None and m.flags.writeable
+    m[0] = -1.0
+    assert a[0] == 0.0
+
+
+def test_buf_surface():
+    a = np.arange(6.0).reshape(2, 3)
+    b = Buf(as_view(a), source="host")
+    assert b.shape == (2, 3) and b.dtype == a.dtype and b.nbytes == a.nbytes
+    assert len(b) == 2
+    np.testing.assert_array_equal(np.asarray(b), a)
+    assert not b.view().flags.writeable
+    c = b.copy()
+    assert c.flags.writeable and c.base is None
+    c[0, 0] = 99.0
+    assert a[0, 0] == 0.0
+    assert "view" in repr(b)
+
+
+def test_copy_mode_flips_and_restores():
+    assert zero_copy_enabled()
+    with copy_mode():
+        assert not zero_copy_enabled()
+        with copy_mode():
+            assert not zero_copy_enabled()
+        assert not zero_copy_enabled()
+    assert zero_copy_enabled()
+
+
+# -- codec registry -------------------------------------------------------
+def test_raw_codec_fast_path_and_header_nbytes(tmpdir):
+    arr = np.arange(1000, dtype=np.int64)
+    path = tmpdir / "a.npy"
+    with open(path, "wb") as f:
+        encoder_for(arr).write(f, arr)
+    assert isinstance(encoder_for(arr), RawCodec)
+    out = decode_file(path)
+    assert isinstance(out, np.memmap) and not out.flags.writeable
+    np.testing.assert_array_equal(out, arr)
+    assert file_nbytes(path) == arr.nbytes
+    with copy_mode():
+        cp = decode_file(path)
+    assert not isinstance(cp, np.memmap)
+
+
+def test_pickle_codec_tail_for_object_arrays(tmpdir):
+    arr = np.array([{"a": 1}, [2, 3]], dtype=object)
+    codec = encoder_for(arr)
+    assert isinstance(codec, PickleCodec)
+    path = tmpdir / "o.npy"
+    with open(path, "wb") as f:
+        codec.write(f, arr)
+    out = decode_file(path)        # chain falls back past RawCodec
+    assert out[0] == {"a": 1} and out[1] == [2, 3]
+    assert file_nbytes(path) == arr.nbytes
+
+
+def test_custom_codec_registration(tmpdir):
+    class NegCodec(Codec):
+        """Stores the negated array (stand-in for a compressing codec)."""
+        name = "neg"
+
+        def accepts(self, arr):
+            return arr.dtype == np.float32
+
+        def write(self, f, arr):
+            np.save(f, -arr)
+
+        def read(self, path, prefer_view=True):
+            return -np.load(path)
+
+        def nbytes(self, path):
+            return int(np.load(path, mmap_mode="r").nbytes)
+
+    codec = register_codec(NegCodec())
+    try:
+        assert encoder_for(np.zeros(3, np.float32)) is codec
+        assert isinstance(encoder_for(np.zeros(3, np.float64)), RawCodec)
+        be = make_backend("file", root=tmpdir / "neg")
+        a = np.arange(4, dtype=np.float32)
+        be.put("k", a)
+        np.testing.assert_array_equal(be.get("k"), a)   # roundtrips
+    finally:
+        unregister_codec(codec)
+
+
+# -- backend view reads ---------------------------------------------------
+def test_file_backend_views_survive_overwrite_and_delete(tmpdir):
+    be = make_backend("file", root=tmpdir / "fb")
+    a = np.arange(100.0)
+    be.put("k", a)
+    v = be.get("k")
+    assert isinstance(v, np.memmap) and not v.flags.writeable
+    be.put("k", a * 2)              # atomic replace under the live view
+    np.testing.assert_array_equal(v, a)     # the inode is pinned
+    np.testing.assert_array_equal(be.get("k"), a * 2)
+    be.delete("k")
+    np.testing.assert_array_equal(v, a)     # still pinned after unlink
+
+
+def test_host_backend_read_is_aliasing_view():
+    be = make_backend("host")
+    a = np.arange(10.0)
+    be.put("k", a)
+    v = be.get("k")
+    assert v.base is not None and not v.flags.writeable
+    with copy_mode():
+        c = be.get("k")
+    assert c.base is None or c.base.base is None    # owned in copy mode
+    np.testing.assert_array_equal(c, a)
+
+
+def test_device_backend_read_is_readonly():
+    be = make_backend("device")
+    a = np.arange(10.0)
+    be.put("k", a)
+    v = be.get("k")
+    assert not v.flags.writeable
+    np.testing.assert_array_equal(v, a)
+
+
+# -- provenance + mutation contract ---------------------------------------
+def test_get_buf_and_partition_buf_carry_provenance(tmpdir):
+    tm = make_tier_manager(root=str(tmpdir / "t"))
+    try:
+        du = DataUnit.from_array("du", np.arange(100.0), 4, tm.backends,
+                                 tier="host", tier_manager=tm)
+        b = tm.get_buf(du._key(0))
+        assert b.source == "host" and not b.owned
+        pb = du.partition_buf(1)
+        assert pb.source == "host"
+        assert not pb.view().flags.writeable
+        w = du.partition_copy(1)
+        w[:] = 0.0                  # sanctioned mutation: owned copy
+        np.testing.assert_array_equal(du.partition(1),
+                                      np.arange(100.0)[25:50])
+    finally:
+        tm.close()
+
+
+def test_partition_is_readonly_and_views_survive_demotion(tmpdir):
+    part_bytes = 25 * 8
+    tm = make_tier_manager(host_budget=2 * part_bytes,
+                           root=str(tmpdir / "t"), promote_threshold=0)
+    try:
+        du = DataUnit.from_array("du", np.arange(100.0), 4, tm.backends,
+                                 tier="host", tier_manager=tm)
+        v0 = du.partition(0)
+        with pytest.raises(ValueError):
+            v0[0] = -1.0
+        expect = np.asarray(v0).copy()
+        for i in range(4):          # budget 2: forces demotions to file
+            du.partition(i)
+        tm.drain(timeout=30)
+        np.testing.assert_array_equal(np.asarray(v0), expect)
+    finally:
+        tm.close()
+
+
+def test_replication_repair_never_mutates_reader_views(tmpdir):
+    class _Pilot:
+        def __init__(self, pid, tm):
+            self.id, self.tier_manager = pid, tm
+
+    tms = [make_tier_manager(root=str(tmpdir / f"p{i}"))
+           for i in range(2)]
+    pds = PilotDataService()
+    try:
+        for i, tm in enumerate(tms):
+            pds.register_pilot(_Pilot(f"p{i}", tm))
+        home = make_tier_manager(root=str(tmpdir / "home"))
+        du = DataUnit.from_array("du", np.arange(64.0), 2, home.backends,
+                                 tier="host", tier_manager=home)
+        pds.register(du, replication=2)
+        reader = du.partition(0)
+        expect = np.asarray(reader).copy()
+        assert pds.repair_once() > 0        # replicate onto both pilots
+        np.testing.assert_array_equal(np.asarray(reader), expect)
+        # a coherent overwrite invalidates replicas but not the live view
+        du.update_partition(0, np.zeros(32))
+        np.testing.assert_array_equal(np.asarray(reader), expect)
+        np.testing.assert_array_equal(du.partition(0), np.zeros(32))
+        home.close()
+    finally:
+        pds.close()
+        for tm in tms:
+            tm.close()
+
+
+# -- counters / stats surface --------------------------------------------
+def test_transport_counters_track_views_and_copies(tmpdir):
+    be = make_backend("file", root=tmpdir / "c")
+    a = np.arange(1000.0)
+    be.put("k", a)
+    TRANSPORT_STATS.reset()
+    be.get("k")
+    snap = TRANSPORT_STATS.snapshot()
+    assert snap["bytes_viewed"] >= a.nbytes and snap["views"] >= 1
+    assert snap["codec"].get("raw.decode") == 1
+    with copy_mode():
+        be.get("k")
+    snap = TRANSPORT_STATS.snapshot()
+    assert snap["bytes_copied"] >= a.nbytes and snap["copies"] >= 1
+
+
+def test_session_stats_expose_transport():
+    with PilotSession(name="transport-stats") as s:
+        s.add_pilot(memory_gb=0.01)
+        du = s.data("pts", np.arange(64.0), parts=2)
+        du.partition(0)
+        stats = s.stats()
+    t = stats["transport"]
+    assert {"bytes_viewed", "bytes_copied", "views", "copies",
+            "codec"} <= set(t)
+
+
+def test_read_partition_outside_pool_falls_back_home(tmpdir):
+    tm = make_tier_manager(root=str(tmpdir / "t"))
+    try:
+        du = DataUnit.from_array("du", np.arange(16.0), 2, tm.backends,
+                                 tier="host", tier_manager=tm)
+        out = read_partition(du, 1)
+        np.testing.assert_array_equal(out, np.arange(16.0)[8:])
+        assert not out.flags.writeable
+    finally:
+        tm.close()
+
+
+def test_read_partition_inside_pool_uses_pilot_tiers():
+    with PilotSession(name="transport-worker") as s:
+        s.add_pilot(memory_gb=0.01)
+        du = s.data("pts", np.arange(64.0), parts=2)
+        batch = s.submit_tasks(
+            [lambda: float(np.sum(read_partition(du, 0)))])
+        assert batch.results(timeout=30) == [float(np.sum(np.arange(32.0)))]

@@ -19,7 +19,9 @@ from a simulated slow home store, the batched task engine misses its
 kill-one-of-N resilience storm loses data / fails to restore
 replication / exceeds 1.5x the fault-free wall time, or the zero-copy
 plane misses its >= 3x view-over-copy fetch floor / regresses the
-steady-state map_reduce past the copy-mode baseline.
+steady-state map_reduce past the copy-mode baseline, or substrate LM
+serving exceeds 1.5x the isolated stack's p99 / loses requests or
+token-count exactness under the chaos kill.
 """
 from __future__ import annotations
 
@@ -31,7 +33,7 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr8.json"
+DEFAULT_JSON = "BENCH_pr9.json"
 MULTIPILOT_MIN_SPEEDUP = 1.3
 CHECKPOINT_MIN_SPEEDUP = 1.0
 SESSION_MIN_SPEEDUP = 1.5
@@ -113,6 +115,10 @@ def _gate(records) -> None:
     # partitions, steady-state map_reduce no worse than the copy baseline
     from benchmarks import bench_transport
     bench_transport.gate(records)
+    # PR 9: LM serving ON the substrate — p99 <= 1.5x the isolated stack
+    # at equal batch, exact token accounting, chaos kill loses nothing
+    from benchmarks import bench_serving
+    bench_serving.gate(records)
 
 
 def main() -> None:
@@ -121,9 +127,9 @@ def main() -> None:
                             bench_fig9_kmeans, bench_kernels,
                             bench_mapreduce, bench_multipilot,
                             bench_resilience, bench_roofline,
-                            bench_session, bench_throughput,
-                            bench_tiering, bench_train_step,
-                            bench_transport)
+                            bench_serving, bench_session,
+                            bench_throughput, bench_tiering,
+                            bench_train_step, bench_transport)
     from benchmarks import common
     quick = "--quick" in sys.argv
     json_path = _json_path(sys.argv)
@@ -142,6 +148,7 @@ def main() -> None:
         bench_throughput.run(quick=True)
         bench_resilience.run(quick=True)
         bench_transport.run(quick=True)
+        bench_serving.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -151,7 +158,8 @@ def main() -> None:
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
                 bench_mapreduce, bench_multipilot, bench_checkpoint,
                 bench_session, bench_throughput, bench_resilience,
-                bench_transport, bench_train_step, bench_roofline):
+                bench_transport, bench_serving, bench_train_step,
+                bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

@@ -1,6 +1,14 @@
-"""Batched serving with continuous batching on a pilot-retained mesh.
+"""LM serving ON the pilot substrate: tiered shards + KV pages, replica
+routing, continuous batching with refill, and mid-stream recovery.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch yi_9b]
+    PYTHONPATH=src python examples/serve_lm.py [--arch yi_9b] [--pilots 2]
+
+The model's parameter shards and each request's KV-page trail live as
+tiered Pilot-Data partitions; every pilot runs its decode loop as a
+long-lived resident task; requests route to replicas through the
+session's SchedulingPolicy.  Run with ``--supervise`` and a checkpoint
+dir to make a mid-stream pilot kill recoverable (see
+tests/test_serving.py for that path under test).
 """
 import argparse
 import sys
@@ -15,10 +23,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_2_1b")
     ap.add_argument("--preset", default="smoke")
+    ap.add_argument("--pilots", default="2")
     args = ap.parse_args()
-    serve_main(["--arch", args.arch, "--preset", args.preset,
-                "--requests", "16", "--batch", "4", "--prompt-len", "16",
-                "--gen", "32", "--max-len", "128"])
+    stats = serve_main(["--arch", args.arch, "--preset", args.preset,
+                        "--requests", "16", "--batch", "4",
+                        "--prompt-len", "16", "--gen", "32",
+                        "--max-len", "128", "--pilots", args.pilots])
+    assert stats["completed"] == 16 and stats["tokens_served"] == 16 * 32
 
 
 if __name__ == "__main__":

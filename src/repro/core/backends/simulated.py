@@ -146,14 +146,14 @@ class SimulatedPilot(PilotCompute):
             cu.state = State.FAILED
             cu.future.set_exception(
                 RuntimeError(f"pilot {self.id} lost its devices (simulated)"))
-            cu.end_time = time.time()
+            cu.end_time = time.monotonic()
             return
         if time.monotonic() < self._slow_until:
             time.sleep(self._slow_severity)     # degraded-node tax per CU
         if cu.id in self.policy.straggle_cu_ids:
             # straggling CU occupies the pilot (visible to the scheduler's
             # utilization score and the straggler monitor)
-            cu.start_time = cu.start_time or time.time()
+            cu.start_time = cu.start_time or time.monotonic()
             with self._lock:
                 self._running += 1
             try:
@@ -166,7 +166,7 @@ class SimulatedPilot(PilotCompute):
             cu.state = State.FAILED
             cu.future.set_exception(
                 RuntimeError(f"CU {cu.id} failed (simulated)"))
-            cu.end_time = time.time()
+            cu.end_time = time.monotonic()
             return
         super()._execute(cu)
 

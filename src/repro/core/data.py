@@ -281,16 +281,19 @@ class DataUnit:
         return futs
 
     # -- per-pilot replica surface ---------------------------------------
-    def replicate_to_pilot(self, pilot, parts=None,
-                           tier: str = "device") -> Dict[int, str]:
+    def replicate_to_pilot(self, pilot, parts=None, tier: str = "device",
+                           pin: bool = False) -> Dict[int, str]:
         """Copy partitions into a pilot's managed tiers (requires binding
-        via PilotDataService.register); returns {partition: landed tier}."""
+        via PilotDataService.register); returns {partition: landed tier}.
+        ``pin=True`` exempts the landed replicas from that pilot's
+        eviction (model shards must not be churned out by request
+        state)."""
         if self.pilot_data_service is None:
             raise RuntimeError(f"DataUnit {self.name}: not bound to a "
                                "PilotDataService")
         pid = pilot if isinstance(pilot, str) else pilot.id
         return self.pilot_data_service.replicate_to_pilot(
-            self, pid, parts=parts, tier=tier)
+            self, pid, parts=parts, tier=tier, pin=pin)
 
     def replica_residency(self, pilot) -> Dict[str, int]:
         """Partition count per tier inside one pilot (empty if unbound)."""
@@ -315,6 +318,28 @@ class DataUnit:
                                "PilotDataService")
         return self.pilot_data_service.persist(self, parts=parts,
                                                flush=flush)
+
+    def append_partition(self, value) -> int:
+        """Grow the DU by one partition and return its index.
+
+        Dynamically-arriving state — e.g. a serving engine's per-request
+        KV pages — needs partitions that appear after registration.  The
+        new partition lands in the home placement under the DU lock (the
+        index is published only after the bytes exist, so a concurrent
+        reader iterating ``range(num_partitions)`` never sees a hole),
+        and from then on behaves like any other partition: pilot replica
+        reads, ``update_partition`` coherence, ``persist`` to the durable
+        tier, replication-factor repair."""
+        arr = np.asarray(value)
+        with self._lock:
+            i = self.num_partitions
+            key = self._key(i)
+            if self.tier_manager is not None:
+                self.tier_manager.put(key, arr, self.tier)
+            else:
+                self._backend(self.tier).put(key, arr)
+            self.num_partitions = i + 1
+        return i
 
     def update_partition(self, i: int, value) -> "DataUnit":
         """Coherent write: the new value lands in the home placement and

@@ -163,7 +163,7 @@ class ComputeDataManager:
         """Append one placement decision, keeping `history` bounded and
         the lifetime counters exact."""
         self.history.append({"cu": cu.id, "pilot": pilot.id,
-                             "score": score, "t": time.time()})
+                             "score": score, "t": time.monotonic()})
         overflow = len(self.history) - self.history_limit
         if overflow > 0:
             del self.history[:overflow]
@@ -184,7 +184,7 @@ class ComputeDataManager:
         n = len(tasks)
         if n == 0:
             return
-        now = time.time()
+        now = time.monotonic()
         window = tasks if n <= self.history_limit \
             else tasks[n - self.history_limit:]
         pid = pilot.id

@@ -354,7 +354,7 @@ class PilotCompute:
 
     def _execute(self, cu: ComputeUnit):
         cu.state = State.RUNNING
-        cu.start_time = time.time()
+        cu.start_time = time.monotonic()
         with self._lock:
             self._running += 1
         try:
@@ -391,14 +391,14 @@ class PilotCompute:
             cu.state = State.FAILED
             cu.future.set_exception(e)
         finally:
-            cu.end_time = time.time()
+            cu.end_time = time.monotonic()
             with self._lock:
                 self._running -= 1
 
     # ------------------------------------------------------------------
     def submit_cu(self, cu: ComputeUnit) -> ComputeUnit:
         cu.state = State.PENDING
-        cu.submit_time = time.time()
+        cu.submit_time = time.monotonic()
         cu.pilot_id = self.id
         with self._lock:
             self._pending += 1

@@ -304,18 +304,22 @@ class PilotDataService:
 
     # -- replication -----------------------------------------------------
     def replicate(self, du, i: int, pilot_id: str,
-                  tier: str = "device") -> str:
+                  tier: str = "device", pin: bool = False) -> str:
         """Ensure partition `i` of `du` is resident in `pilot_id`, copying
         it in from the home placement (or another replica) when absent and
         promoting it toward `tier` when already held colder.  Returns the
         tier the replica occupies; raises CapacityError when the partition
-        cannot fit anywhere in the pilot's hierarchy."""
+        cannot fit anywhere in the pilot's hierarchy.  ``pin=True`` marks
+        the replica eviction-exempt inside that pilot (a serving fleet's
+        model shards must survive KV-page churn)."""
         tm = self._managers.get(pilot_id)
         if tm is None:
             raise KeyError(f"unknown pilot {pilot_id!r}")
         key = du._key(i)
         with self._stripe(key):
             if self._holds(pilot_id, key) and tm.tier_of(key) is not None:
+                if pin:
+                    tm.pin(key)
                 if tier in tm.backends:
                     try:
                         return tm.stage(key, tier)   # no-op when already hot
@@ -325,7 +329,7 @@ class PilotDataService:
             val = self._fetch(du, i, exclude=pilot_id, dest=pilot_id)
             dst = tier if tier in tm.backends else tm.order[-1]
             try:
-                tm.put(key, _as_nd(val), dst)
+                tm.put(key, _as_nd(val), dst, pinned=pin)
             except CapacityError:
                 with self._lock:
                     self.counters["replicate_refused"] += 1
@@ -368,18 +372,20 @@ class PilotDataService:
 
     def replicate_to_pilot(self, du, pilot_id: str,
                            parts: Optional[Sequence[int]] = None,
-                           tier: str = "device") -> Dict[int, str]:
+                           tier: str = "device",
+                           pin: bool = False) -> Dict[int, str]:
         """Synchronously replicate `parts` (default: all partitions) of
         `du` into a pilot; returns {partition: landed tier} for the copies
         that fit (capacity-refused or vanished partitions are skipped, not
-        forced; an unregistered pilot raises)."""
+        forced; an unregistered pilot raises).  ``pin=True`` marks the
+        landed replicas eviction-exempt in that pilot."""
         if pilot_id not in self._managers:
             raise KeyError(f"unknown pilot {pilot_id!r}: register it with "
                            "register_pilot first")
         out: Dict[int, str] = {}
         for i in (range(du.num_partitions) if parts is None else parts):
             try:
-                out[i] = self.replicate(du, i, pilot_id, tier)
+                out[i] = self.replicate(du, i, pilot_id, tier, pin=pin)
             except (CapacityError, KeyError):
                 continue
         return out

@@ -258,6 +258,36 @@ class PilotSession:
         self._data[name] = du
         return du
 
+    def data_parts(self, name: str, parts: Sequence, *, tier: str = "host",
+                   affinity: str = "", persist: bool = False,
+                   replication: int = 0) -> DataUnit:
+        """Create a DataUnit from explicit per-partition arrays — ragged
+        shapes allowed — and bind it to the session's data service.
+
+        Where `data()` splits one array on axis 0, this takes the
+        partition list as given: model shard leaves (one param leaf per
+        partition), per-request KV pages, any heterogeneous collection.
+        An empty list is valid — grow it later with
+        ``DataUnit.append_partition`` (dynamically-arriving request
+        state).  `persist`/`replication` behave exactly as in `data()`."""
+        if self._closed:
+            raise RuntimeError(f"{self.name} is closed")
+        if name in self._data:
+            raise ValueError(f"DataUnit {name!r} already exists in "
+                             f"{self.name} (names are session-unique)")
+        backends = {"host": self._host_backend,
+                    "device": make_backend("device")}
+        if tier not in backends:
+            raise ValueError(f"data_parts(): unsupported home tier "
+                             f"{tier!r} (have {sorted(backends)})")
+        du = DataUnit.from_partitions(
+            name, [np.asarray(p) for p in parts], backends, tier=tier,
+            affinity=affinity)
+        self.data_service.register(du, persist=persist,
+                                   replication=replication)
+        self._data[name] = du
+        return du
+
     def get_data(self, name: str) -> DataUnit:
         return self._data[name]
 

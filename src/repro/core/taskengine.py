@@ -384,6 +384,7 @@ class WorkerPool:
                                    chunk=chunk)
         self.executed = 0           # telemetry (GIL-atomic increments)
         self._threads: List[threading.Thread] = []
+        self._residents: List[Tuple[Task, threading.Thread]] = []
         self._lock = threading.Lock()
         self._started = False
         self._engine: Optional["TaskEngine"] = None
@@ -420,20 +421,70 @@ class WorkerPool:
         self.ensure_started()
         return self.queue.put_force(tasks)
 
+    def spawn_resident(self, fn: Callable, *args, name: str = "resident",
+                       **kwargs) -> Task:
+        """Run `fn` as a LONG-LIVED task on its own dedicated thread,
+        pinned to this pool's pilot (``current_pilot()`` resolves inside
+        it, so the body reads the pilot's tiers like any chunked task).
+
+        Resident tasks are for service loops — a serving engine's
+        continuous-batching decode loop, a poller — that would otherwise
+        squat on one of the pool's chunked workers forever and starve the
+        batch path.  They never re-bind on failure (a loop is not an
+        idempotent work item; its owner observes the error through the
+        returned Task and runs its own recovery) and they are expected to
+        honor their owner's stop signal: ``close()`` joins them bounded
+        after the chunked drain.  Raises TaskError once the pool is
+        closed."""
+        if self.queue.closed:
+            raise TaskError(
+                f"pool of pilot {getattr(self.pilot, 'id', '?')} is closed")
+        batch = TaskBatch()
+        t = Task(fn, args, kwargs or None, batch)
+        batch._arm([t])
+        t.pilot_id = getattr(self.pilot, "id", None)
+        th = threading.Thread(
+            target=self._run_resident, args=(t,), daemon=True,
+            name=f"{getattr(self.pilot, 'id', 'pool')}-{name}")
+        with self._lock:
+            self._residents.append((t, th))
+        th.start()
+        return t
+
+    def _run_resident(self, t: Task) -> None:
+        _tls.pilot = self.pilot     # pin: current_pilot() inside the loop
+        try:
+            v = (t.fn(*t.args) if t.kwargs is None
+                 else t.fn(*t.args, **t.kwargs))
+        except BaseException as e:  # noqa: BLE001 - failure is a state
+            _finalize_error(t, e)
+        else:
+            t.value = v
+            t.done = True
+            t.batch._done_n(1)
+        finally:
+            _tls.pilot = None
+
     def close(self, timeout: float = 30.0) -> None:
         """Drain-and-stop: refuse new work, run the accepted backlog to
-        completion, join the workers.  A never-started pool finalizes any
-        backlog inline so no accepted task is left pending."""
+        completion, join the workers (chunked, then resident — their
+        owners are expected to have signalled them to stop; the join is
+        bounded either way).  A never-started pool finalizes any backlog
+        inline so no accepted task is left pending."""
         self.queue.close()
-        if not self._started:
+        with self._lock:
+            residents = list(self._residents)
+        if self._started:
+            for t in self._threads:
+                t.join(timeout)
+        else:
             while True:
                 chunk = self.queue.take(timeout=0)
                 if not chunk:
                     break
                 self._execute_chunk(chunk)
-            return
-        for t in self._threads:
-            t.join(timeout)
+        for _t, th in residents:
+            th.join(timeout)
 
     # -- execution -------------------------------------------------------
     def _run(self) -> None:
@@ -494,6 +545,12 @@ class WorkerPool:
             eng._task_failed(t, exc, self.pilot)
         else:
             _finalize_error(t, exc)
+
+    @property
+    def residents(self) -> int:
+        """Live resident (long-lived) tasks on this pool."""
+        with self._lock:
+            return sum(1 for _t, th in self._residents if th.is_alive())
 
     def __repr__(self) -> str:
         return (f"WorkerPool({getattr(self.pilot, 'id', '?')}, "
@@ -636,6 +693,21 @@ class TaskEngine:
                     _finalize_error(t, err)
         return batch
 
+    def submit_resident(self, fn: Callable, *args, pilot,
+                        name: str = "resident", **kwargs) -> Task:
+        """Spawn a long-lived task pinned to `pilot` (explicit binding —
+        a resident loop is placed by its owner, e.g. a serving engine's
+        per-replica decode loop, not scored: it runs where its state
+        lives).  The body executes on a dedicated thread of the pilot's
+        resident WorkerPool with ``current_pilot()`` set, without ever
+        occupying the pool's chunked workers; the returned Task resolves
+        when the loop exits (its owner's stop signal, pilot loss, or a
+        crash)."""
+        if pilot is None:
+            raise ValueError("submit_resident: pilot is required")
+        return self.pool_for(pilot).spawn_resident(fn, *args, name=name,
+                                                   **kwargs)
+
     # -- failure / re-bind ----------------------------------------------
     def _task_failed(self, t: Task, exc: BaseException, pilot) -> None:
         """result_with_retry, task-batched: re-bind onto a healthy pilot
@@ -677,5 +749,6 @@ class TaskEngine:
                 row = pool.queue.stats()
                 row["executed"] = pool.executed
                 row["workers"] = pool.workers
+                row["residents"] = pool.residents
                 out[p.id] = row
         return out

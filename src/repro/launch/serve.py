@@ -1,30 +1,37 @@
-"""Serving driver: batched prefill + decode with continuous batching.
+"""Serving CLI: continuous-batching LM serving ON the pilot substrate.
 
     python -m repro.launch.serve --arch llama3_2_1b --preset 20m \
-        --requests 32 --batch 8 --gen 64
+        --requests 32 --batch 8 --gen 64 --pilots 2
 
-A PilotCompute retains the mesh, the warm prefill/decode executables, and
-the KV cache (a device-tier resource held across CUs — the Pilot-Data
-Memory idea applied to serving state). Requests flow through a queue;
-finished rows are refilled in place (continuous batching): the decode batch
-never drains while requests remain.
+This used to be a standalone driver that ran *beside* the pilot system
+(params and KV state in loop locals, no scheduler, no recovery) — and
+its continuous-batching loop was broken: finished rows were never
+refilled with pending prompts, and retired/padded rows kept sampling and
+counting as served tokens.  It is now a thin CLI over
+``repro.serving.ServingEngine`` (see that module): model shards and
+KV-cache pages are tiered Pilot-Data partitions, requests route
+replica-aware through the ``SchedulingPolicy``, each pilot runs its
+decode loop as a long-lived resident task, and — with ``--supervise``
+and a ``--checkpoint-dir`` — a pilot killed mid-stream has its in-flight
+requests recovered from the durable tier.
+
+Migration: all the old flags work unchanged; the old single-pilot
+behavior is ``--pilots 1`` (the default).  Programmatic users of
+``main()`` now get the engine's stats dict back instead of the median
+decode-step time.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ComputeDataManager, PilotComputeDescription,
-                        PilotComputeService)
+from repro.core import PilotSession
 from repro.launch.train import scaled_config
 from repro.models.model import build_model
-from repro.parallel.sharding import AxisRules, sharding_context
-from repro.train import steps as steps_mod
+from repro.serving import ServingEngine
 
 
 def main(argv=None):
@@ -37,101 +44,53 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--pilots", type=int, default=1,
+                    help="serving replicas (pilots) in the session")
+    ap.add_argument("--memory-gb", type=float, default=0.5,
+                    help="managed memory per pilot (shard + page tiers)")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="KV-page flush granularity in generated tokens")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="durable tier for shards + KV pages (enables "
+                         "recovery of in-flight requests)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="self-healing session: quarantine/respawn dead "
+                         "pilots mid-stream")
     args = ap.parse_args(argv)
 
     cfg = scaled_config(args.arch, args.preset)
     model = build_model(cfg)
-    svc = PilotComputeService()
-    pilot = svc.submit_pilot(PilotComputeDescription(
-        backend="inprocess", num_devices=jax.device_count(),
-        affinity="server"))
-    mesh = pilot.mesh
-    rules = AxisRules()
-
-    params = model.init(jax.random.key(0))
-
-    def jit_prefill():
-        def fn(params, batch):
-            with sharding_context(mesh, rules):
-                return model.prefill(params, batch, args.max_len)
-        return jax.jit(fn)
-
-    def jit_decode():
-        def fn(params, cache, tokens, positions):
-            with sharding_context(mesh, rules):
-                return model.decode(params, cache, tokens, positions)
-        return jax.jit(fn, donate_argnums=(1,))
-
-    prefill = pilot.jit_cached(("prefill", cfg.name), jit_prefill)
-    decode = pilot.jit_cached(("decode", cfg.name), jit_decode)
-
     rng = np.random.default_rng(0)
-    pending: List[np.ndarray] = [
-        rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
-        for _ in range(args.requests)]
-    completed = 0
-    t_start = time.time()
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=args.prompt_len).astype(np.int32)
+               for _ in range(args.requests)]
 
-    # --- initial wave: batched prefill ---
-    def take_batch():
-        wave, rest = pending[:args.batch], pending[args.batch:]
-        while len(wave) < args.batch:  # pad with copies; marked inactive
-            wave.append(wave[0])
-        return np.stack(wave), rest
-
-    wave, pending = take_batch()
-    batch = {"tokens": jnp.asarray(wave)}
-    if cfg.vision_tokens:
-        batch["patch_embeds"] = jnp.zeros(
-            (args.batch, cfg.vision_tokens, cfg.vision_embed_dim), jnp.float32)
-    if cfg.encoder_layers:
-        batch["frames"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    prefill_s = time.time() - t0
-
-    positions = jnp.full((args.batch,),
-                         args.prompt_len + (cfg.vision_tokens or 0) - 1,
-                         jnp.int32)
-    generated = np.zeros((args.batch,), np.int32)
-    key = jax.random.key(1)
-    decode_times = []
-    total_tokens = 0
-    while completed < args.requests:
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / args.temperature, -1)
-        else:
-            tok = jnp.argmax(logits, axis=-1)
-        positions = positions + 1
-        t0 = time.time()
-        logits, cache = decode(params, cache, tok[:, None].astype(jnp.int32),
-                               positions)
-        jax.block_until_ready(logits)
-        decode_times.append(time.time() - t0)
-        generated += 1
-        total_tokens += args.batch
-        finished = np.nonzero(np.asarray(generated) >= args.gen)[0]
-        for row in finished:
-            completed += 1
-            generated[row] = 0
-            if completed + args.batch > args.requests and not pending:
-                generated[row] = -10**6  # slot retired
-            # continuous batching: new request takes the finished row
-            # (fresh prompt re-prefilled lazily: simplified to restart pos)
-            positions = positions.at[row].set(args.prompt_len - 1)
-        if completed >= args.requests:
-            break
-
-    wall = time.time() - t_start
-    med = float(np.median(decode_times)) if decode_times else 0.0
-    print(f"[serve] {cfg.name}: prefill({args.batch}x{args.prompt_len}) "
-          f"{prefill_s*1e3:.0f}ms; decode median {med*1e3:.1f}ms/step "
-          f"({args.batch/med:.0f} tok/s); {completed} requests in {wall:.1f}s")
-    svc.cancel_all()
-    return med
+    with PilotSession(checkpoint_dir=args.checkpoint_dir,
+                      supervise=args.supervise) as session:
+        session.add_pilots(args.pilots, num_devices=jax.device_count(),
+                           memory_gb=args.memory_gb, affinity="server")
+        engine = ServingEngine(
+            session, model, batch_size=args.batch, max_len=args.max_len,
+            temperature=args.temperature, page_tokens=args.page_tokens)
+        with engine:
+            engine.deploy()
+            t0 = time.perf_counter()
+            reqs = [engine.submit(p, args.gen) for p in prompts]
+            engine.drain(timeout=600)
+            wall = time.perf_counter() - t0
+            stats = engine.stats()
+            for r in reqs:
+                assert len(r.result()) == args.gen
+        steps = max(1, stats["decode_steps"])
+        print(f"[serve] {cfg.name}: {stats['completed']}/{args.requests} "
+              f"requests on {args.pilots} pilot(s) in {wall:.1f}s; "
+              f"{stats['tokens_served']} tokens "
+              f"({stats['tokens_served'] / wall:.0f} tok/s, "
+              f"{wall / steps * 1e3:.1f}ms/step), "
+              f"p99 latency {stats['p99_latency_s'] * 1e3:.0f}ms, "
+              f"refills={stats['refills']}, "
+              f"recovered={stats['recovered_requests']}")
+        return stats
 
 
 if __name__ == "__main__":

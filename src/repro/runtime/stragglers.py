@@ -43,7 +43,7 @@ class StragglerMonitor:
         cut = self.cutoff()
         if cut is None or not cu.start_time or cu.end_time:
             return False
-        if (now or time.time()) - cu.start_time > cut:
+        if (now or time.monotonic()) - cu.start_time > cut:
             with self._lock:
                 self.flagged.append(cu.id)
             return True
@@ -57,7 +57,7 @@ def run_speculative(manager: ComputeDataManager, desc: ComputeUnitDescription,
     primary = manager.submit(desc)
     cus = [primary]
     backups = 0
-    t0 = time.time()
+    t0 = time.monotonic()
     while True:
         done = [c for c in cus if c.future.done()]
         for c in done:
@@ -74,6 +74,6 @@ def run_speculative(manager: ComputeDataManager, desc: ComputeUnitDescription,
             cus.append(manager.submit(
                 desc, exclude=frozenset({primary.pilot_id})))
             backups += 1
-        if time.time() - t0 > timeout:
+        if time.monotonic() - t0 > timeout:
             raise TimeoutError(f"CU {primary.id} timed out")
         time.sleep(poll)

@@ -1,0 +1,5 @@
+"""LM serving on the pilot substrate (see repro.serving.engine)."""
+from repro.serving.engine import (ServeRequest, ServingEngine,
+                                  sample_tokens, splice_row)
+
+__all__ = ["ServingEngine", "ServeRequest", "sample_tokens", "splice_row"]

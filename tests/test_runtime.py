@@ -29,7 +29,7 @@ def test_straggler_monitor_flags_outlier():
 
     class FakeCU:
         id = "slow"
-        start_time = time.time() - 5.0
+        start_time = time.monotonic() - 5.0
         end_time = 0.0
     assert mon.is_straggling(FakeCU())
     assert "slow" in mon.flagged
@@ -45,12 +45,12 @@ def test_speculative_execution_backup_wins(service):
     manager = ComputeDataManager(service)
     mon = StragglerMonitor(threshold=3.0, min_samples=3)
     mon.durations.extend([0.02] * 5)
-    t0 = time.time()
+    t0 = time.monotonic()
     out, info = run_speculative(
         manager, ComputeUnitDescription(fn=lambda: "done", name="lag"), mon)
     assert out == "done"
     assert info["launched"] >= 2          # a backup was launched
-    assert time.time() - t0 < 2.0         # didn't wait for the straggler
+    assert time.monotonic() - t0 < 2.0         # didn't wait for the straggler
 
 
 def test_resilient_runner_recovers_from_pilot_loss(service, tmp_path):

@@ -105,3 +105,139 @@ def test_decode_kernel_parity_with_jnp_path():
     np.testing.assert_allclose(np.asarray(l1, np.float32),
                                np.asarray(l2, np.float32), atol=5e-2,
                                rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine on the pilot substrate (PR 9).  A deterministic stub model
+# (next token = last token + 1 mod vocab) makes every assertion exact —
+# no float tolerance anywhere, so the refill/masking/recovery plumbing is
+# tested in isolation from model numerics.
+# ---------------------------------------------------------------------------
+import tempfile
+import time
+from types import SimpleNamespace
+
+from repro.core import PilotSession
+from repro.core.pilot import State
+from repro.serving import ServingEngine
+
+
+class _StubModel:
+    """next = (last + 1) % vocab; cache is a dict with batch axis 0."""
+
+    def __init__(self, vocab=32, delay=0.0):
+        self.cfg = SimpleNamespace(name="stub", vocab_size=vocab,
+                                   vision_tokens=0, encoder_layers=0)
+        self.vocab = vocab
+        self.delay = delay
+
+    def init(self, key):
+        return {"w": jnp.zeros((4,), jnp.float32)}
+
+    def _step(self, last):
+        logits = jax.nn.one_hot((last + 1) % self.vocab, self.vocab) * 100.0
+        return logits, {"last": last.astype(jnp.int32).reshape(-1, 1)}
+
+    def _sleep(self):
+        time.sleep(self.delay)
+        return np.int32(0)
+
+    def prefill(self, params, batch, max_len):
+        return self._step(batch["tokens"][:, -1])
+
+    def decode(self, params, cache, tokens, positions):
+        tok = tokens[:, 0]
+        if self.delay:
+            # the engine jits decode; a bare time.sleep would run only at
+            # trace time — io_callback makes the delay a runtime effect
+            pause = jax.experimental.io_callback(
+                self._sleep, jax.ShapeDtypeStruct((), jnp.int32),
+                ordered=True)
+            tok = tok + pause
+        return self._step(tok)
+
+
+def _expected(prompt, gen, vocab=32):
+    return [(int(prompt[-1]) + 1 + i) % vocab for i in range(gen)]
+
+
+def test_engine_refill_exact_token_counts():
+    """More requests than batch rows: freed rows MUST be refilled from the
+    queue (the old serve.py never drained pending after the first wave),
+    and every request's output must be exact — so a row that serves
+    request A then request B can't leak tokens across the splice."""
+    model = _StubModel()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 32, size=4 + (i % 3)).astype(np.int32)
+               for i in range(6)]
+    with PilotSession() as s:
+        s.add_pilots(1, memory_gb=0.25)
+        with ServingEngine(s, model, batch_size=2, max_len=32,
+                           page_tokens=4) as eng:
+            eng.deploy()
+            reqs = [eng.submit(p, 5) for p in prompts]
+            eng.drain(timeout=60)
+            for p, r in zip(prompts, reqs):
+                assert r.result(timeout=5) == _expected(p, 5)
+            st = eng.stats()
+    assert st["completed"] == 6
+    assert st["refills"] >= 4          # 6 requests through 2 rows
+    assert st["tokens_served"] == 6 * 5  # exact: no padded/retired counting
+
+
+def test_engine_inactive_rows_do_not_count_tokens():
+    """Rows that finished early (short gen) or were padding in a prefill
+    wave must stop sampling AND stop counting: tokens_served is exactly
+    the sum of requested gen lengths (the old loop kept counting retired
+    rows via the `generated[row] = -1e6` hack)."""
+    model = _StubModel()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 32, size=4).astype(np.int32)
+               for _ in range(3)]
+    gens = [2, 9, 5]                   # ragged: rows retire at different steps
+    with PilotSession() as s:
+        s.add_pilots(1, memory_gb=0.25)
+        with ServingEngine(s, model, batch_size=4, max_len=32,
+                           page_tokens=4) as eng:   # batch 4 > 3 requests
+            eng.deploy()
+            reqs = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+            eng.drain(timeout=60)
+            for p, g, r in zip(prompts, gens, reqs):
+                got = r.result(timeout=5)
+                assert got == _expected(p, g)
+                assert len(got) == g   # exactly g — not max(gens), not 0
+            st = eng.stats()
+    assert st["tokens_served"] == sum(gens)
+
+
+def test_engine_recovers_requests_after_pilot_kill():
+    """Kill a pilot mid-decode (state FAILED + volatile tiers lost, as the
+    chaos harness does): its in-flight requests must be recovered from
+    the durable KV-page partitions and finish on the surviving replica
+    with byte-exact outputs and exact token accounting."""
+    model = _StubModel(delay=0.02)     # slow decode so the kill lands mid-run
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 32, size=5).astype(np.int32)
+               for _ in range(4)]
+    with tempfile.TemporaryDirectory() as ckpt:
+        with PilotSession(checkpoint_dir=ckpt, supervise=True) as s:
+            pilots = s.add_pilots(2, memory_gb=0.25)
+            with ServingEngine(s, model, batch_size=2, max_len=64,
+                               page_tokens=4) as eng:
+                eng.deploy()
+                reqs = [eng.submit(p, 30) for p in prompts]
+                time.sleep(0.25)       # let decode get going on both pilots
+                # kill a pilot that actually owns in-flight requests, so
+                # the recovery path is exercised regardless of routing
+                victim = next((rep.pilot for rep in eng._replicas.values()
+                               if rep.active), pilots[0])
+                victim.state = State.FAILED
+                if victim.tier_manager is not None:
+                    victim.tier_manager.lose_volatile()
+                eng.drain(timeout=120)
+                for p, r in zip(prompts, reqs):
+                    assert r.result(timeout=10) == _expected(p, 30)
+                st = eng.stats()
+    assert st["completed"] == 4        # zero data loss
+    assert st["recovered_requests"] >= 1
+    assert st["replica_deaths"] >= 1

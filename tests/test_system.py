@@ -64,8 +64,10 @@ def test_train_other_families_smoke(arch, tmp_path):
 
 
 def test_serve_end_to_end():
-    med = serve_main([
+    stats = serve_main([
         "--arch", "llama3_2_1b", "--preset", "smoke", "--requests", "6",
         "--batch", "3", "--prompt-len", "8", "--gen", "8",
         "--max-len", "32"])
-    assert med > 0
+    assert stats["completed"] == 6
+    assert stats["tokens_served"] == 6 * 8  # exact: no phantom row tokens
+    assert stats["decode_steps"] > 0

@@ -1,0 +1,284 @@
+"""PR 10 elasticity bench: scale-out under burst, lossless scale-in,
+priced rebalancing.
+
+Three measurements, three gate clauses (the ROADMAP elasticity gate):
+
+  * ``scale_out`` — a bursty sleep-task workload (waves of tasks
+    arriving faster than one pilot drains them) runs once on a STATIC
+    1-pilot fleet and once on an autoscaled fleet that starts identical
+    (min 1, max ``MAX_PILOTS``, load-watermark policy).  The autoscaler
+    must observe the backlog, grow mid-job, and beat the static fleet by
+    ``MIN_SPEEDUP``x — the paper's elasticity argument measured end to
+    end, with every scaling decision carrying the signal values that
+    drove it.
+  * ``scale_in`` — a 3-pilot fleet holding replicated + persisted
+    DataUnits (every partition deliberately piled onto the victims)
+    drains down to 1 pilot through the full protocol.  ZERO loss: every
+    partition byte-identical to the source afterwards.
+  * ``rebalance`` — every partition piled onto one donor, one pilot
+    quarantined: the rebalancer must move partitions to the idle
+    receiver, price every move through the InterconnectModel, and never
+    touch the quarantined pilot.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import (Autoscaler, InterconnectModel, Link,
+                        LoadScalingPolicy, PilotSession, Rebalancer)
+
+MIN_SPEEDUP = 1.2       # elastic vs static-small wall time
+MAX_PILOTS = 3
+TASK_SLEEP_S = 0.004
+
+
+def _work(_i: int) -> int:
+    time.sleep(TASK_SLEEP_S)
+    return _i
+
+
+def _burst_workload(s: PilotSession, n_tasks: int, wave: int,
+                    wave_gap_s: float) -> float:
+    """Submit `n_tasks` sleep tasks in waves (so backlog builds between
+    policy ticks) and return the wall time until ALL results landed."""
+    t0 = time.perf_counter()
+    batches = []
+    for lo in range(0, n_tasks, wave):
+        items = [(_work, (i,)) for i in range(lo, min(lo + wave, n_tasks))]
+        batches.append(s.submit_tasks(items, timeout=120.0))
+        time.sleep(wave_gap_s)
+    got = []
+    for b in batches:
+        got.extend(b.results(timeout=120.0))
+    assert got == list(range(n_tasks))
+    return time.perf_counter() - t0
+
+
+def _bench_scale_out(n_tasks: int, wave: int) -> dict:
+    out = {}
+    # static small fleet: 1 pilot, forever
+    with PilotSession(name="bench-as-static") as s:
+        s.add_pilots(1, memory_gb=0.05, task_workers=2)
+        out["static_s"] = _burst_workload(s, n_tasks, wave, 0.01)
+    # elastic fleet: starts identical, grows from the backlog signal
+    with PilotSession(name="bench-as-elastic") as s:
+        s.add_pilots(1, memory_gb=0.05, task_workers=2)
+        a = Autoscaler(
+            s, min_pilots=1, max_pilots=MAX_PILOTS,
+            policy=LoadScalingPolicy(scale_out_load=1.0, hysteresis=1),
+            interval_s=0.02, cooldown_s=0.05).start()
+        try:
+            out["elastic_s"] = _burst_workload(s, n_tasks, wave, 0.01)
+            stats = a.stats()
+        finally:
+            a.close()
+        out["end_pilots"] = stats["running"]
+        out["scale_outs"] = stats["counters"]["scale_outs"]
+        decisions = [d for d in stats["decisions"]
+                     if d["action"].startswith("scale")]
+        out["scaling_events"] = len(decisions)
+        # the acceptance contract: every scaling event reports the
+        # signal values, the action, and the victim/newcomer pilot
+        out["decisions_with_signals"] = sum(
+            1 for d in decisions
+            if d["signals"].get("n_pilots") is not None and d["pilot"])
+    out["speedup"] = (out["static_s"] / out["elastic_s"]
+                      if out["elastic_s"] > 0 else float("inf"))
+    return out
+
+
+def _bench_scale_in(parts: int) -> dict:
+    out = {}
+    rng = np.random.default_rng(0)
+    repl = rng.normal(size=(parts * 64, 8)).astype(np.float32)
+    pers = rng.normal(size=(parts * 32, 4)).astype(np.float32)
+    ckdir = tempfile.mkdtemp(prefix="bench-autoscale-in-")
+    try:
+        with PilotSession(name="bench-as-drain",
+                          checkpoint_dir=ckdir) as s:
+            s.add_pilots(3, memory_gb=0.05, host_memory_gb=0.5)
+            du_r = s.data("replicated", repl, parts=parts, replication=2)
+            du_p = s.data("persisted", pers, parts=parts, persist=True)
+            a = Autoscaler(s, min_pilots=1, max_pilots=4)
+            # pile every partition onto the pilots about to leave, so the
+            # drain protocol must actually migrate / checkpoint-flush
+            for du in (du_r, du_p):
+                for p in s.pilots[:2]:
+                    s.data_service.replicate_to_pilot(du, p.id,
+                                                      tier="host")
+            t0 = time.perf_counter()
+            released = [a.scale_in(reason="bench"),
+                        a.scale_in(reason="bench")]
+            out["drain_s"] = time.perf_counter() - t0
+            out["released"] = sum(1 for p in released if p is not None)
+            out["end_pilots"] = len(s.pilots)
+            evac = [d.detail.get("evacuated", {}) for d in a.decisions
+                    if d.action == "scale-in"]
+            out["migrated"] = sum(e.get("migrated", 0) for e in evac)
+            out["flushed"] = sum(e.get("flushed", 0) for e in evac)
+            out["evac_failed"] = sum(e.get("failed", 0) for e in evac)
+            lost = 0
+            for du, src in ((du_r, repl), (du_p, pers)):
+                ref = np.array_split(src, parts, axis=0)
+                for i in range(parts):
+                    try:
+                        if not np.array_equal(np.asarray(du.partition(i)),
+                                              ref[i]):
+                            lost += 1
+                    except Exception:   # noqa: BLE001 - unreadable = lost
+                        lost += 1
+            out["lost_partitions"] = lost
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+    return out
+
+
+def _bench_rebalance(parts: int) -> dict:
+    out = {}
+    ic = InterconnectModel(default=Link(gbps=10.0, latency_s=1e-4))
+    with PilotSession(name="bench-as-rebal", interconnect=ic) as s:
+        pilots = s.add_pilots(3, memory_gb=0.05, host_memory_gb=0.5)
+        donor, _receiver, sick = pilots
+        rng = np.random.default_rng(1)
+        ref = rng.normal(size=(parts * 64, 8)).astype(np.float32)
+        du = s.data("skewed", ref, parts=parts)
+        s.data_service.replicate_to_pilot(du, donor.id, tier="host")
+        s.manager.policy.quarantine(sick.id)
+        s.data_service.avoid_pilot(sick.id)
+        r = Rebalancer(s, skew=1.2, max_moves=parts)
+        t0 = time.perf_counter()
+        moves = r.rebalance_once()
+        out["rebalance_s"] = time.perf_counter() - t0
+        done = [m for m in moves if m.status == "done"]
+        out["moves"] = len(done)
+        out["bytes_moved"] = sum(m.nbytes for m in done)
+        out["unpriced_moves"] = sum(1 for m in done if m.cost_s <= 0)
+        out["quarantined_touched"] = sum(
+            1 for m in done if sick.id in (m.src, m.dst))
+        src = np.array_split(ref, parts, axis=0)
+        out["data_intact"] = all(
+            np.array_equal(np.asarray(du.partition(i)), src[i])
+            for i in range(parts))
+    return out
+
+
+def run(quick: bool = False):
+    n_tasks = 240 if quick else 600
+    wave = 24 if quick else 40
+    parts = 6 if quick else 10
+
+    # warmup: one tiny fleet cycle pays import/jit/provision overheads
+    with PilotSession(name="bench-as-warmup") as s:
+        s.add_pilots(1, memory_gb=0.05)
+        s.submit_tasks([(_work, (0,))]).results(timeout=30.0)
+
+    so = _bench_scale_out(n_tasks, wave)
+    common.emit("bench_autoscale.static_small", so["static_s"],
+                f"tasks={n_tasks} pilots=1")
+    common.emit("bench_autoscale.scale_out", so["elastic_s"],
+                f"speedup={so['speedup']:.2f}x "
+                f"end_pilots={so['end_pilots']} "
+                f"events={so['scaling_events']}")
+    common.record("bench_autoscale.scale_out",
+                  seconds=so["elastic_s"], static_seconds=so["static_s"],
+                  speedup_vs_static=so["speedup"],
+                  min_speedup=MIN_SPEEDUP,
+                  end_pilots=so["end_pilots"], max_pilots=MAX_PILOTS,
+                  scale_outs=so["scale_outs"],
+                  scaling_events=so["scaling_events"],
+                  decisions_with_signals=so["decisions_with_signals"],
+                  n_tasks=n_tasks, wave=wave)
+
+    si = _bench_scale_in(parts)
+    common.emit("bench_autoscale.scale_in", si["drain_s"],
+                f"released={si['released']} migrated={si['migrated']} "
+                f"flushed={si['flushed']} lost={si['lost_partitions']}")
+    common.record("bench_autoscale.scale_in",
+                  seconds=si["drain_s"], released=si["released"],
+                  end_pilots=si["end_pilots"], migrated=si["migrated"],
+                  flushed=si["flushed"], evac_failed=si["evac_failed"],
+                  lost_partitions=si["lost_partitions"], parts=parts)
+
+    rb = _bench_rebalance(parts)
+    common.emit("bench_autoscale.rebalance", rb["rebalance_s"],
+                f"moves={rb['moves']} bytes={rb['bytes_moved']} "
+                f"intact={rb['data_intact']}")
+    common.record("bench_autoscale.rebalance",
+                  seconds=rb["rebalance_s"], moves=rb["moves"],
+                  bytes_moved=rb["bytes_moved"],
+                  unpriced_moves=rb["unpriced_moves"],
+                  quarantined_touched=rb["quarantined_touched"],
+                  data_intact=rb["data_intact"], parts=parts)
+
+
+def gate(records) -> None:
+    """CI guardrails for the elasticity path (raises SystemExit)."""
+    import sys
+    rows = {r["name"]: r for r in records}
+
+    so = rows.get("bench_autoscale.scale_out")
+    if so is None:
+        print("bench gate: no bench_autoscale.scale_out record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if so.get("speedup_vs_static", 0.0) < MIN_SPEEDUP:
+        print(f"bench gate: elastic fleet only "
+              f"{so.get('speedup_vs_static'):.2f}x static-small "
+              f"(floor {MIN_SPEEDUP}x)", file=sys.stderr)
+        raise SystemExit(1)
+    if so.get("scale_outs", 0) < 1:
+        print("bench gate: the autoscaler never scaled out",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if so.get("decisions_with_signals", 0) < so.get("scaling_events", 1):
+        print("bench gate: scaling decisions missing signal values or "
+              "pilot ids", file=sys.stderr)
+        raise SystemExit(1)
+
+    si = rows.get("bench_autoscale.scale_in")
+    if si is None:
+        print("bench gate: no bench_autoscale.scale_in record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if si.get("lost_partitions", 1) != 0 or si.get("evac_failed", 1) != 0:
+        print(f"bench gate: scale-in LOST DATA "
+              f"(lost={si.get('lost_partitions')} "
+              f"evac_failed={si.get('evac_failed')})", file=sys.stderr)
+        raise SystemExit(1)
+    if si.get("released", 0) != 2:
+        print(f"bench gate: expected 2 drained releases, got "
+              f"{si.get('released')}", file=sys.stderr)
+        raise SystemExit(1)
+
+    rb = rows.get("bench_autoscale.rebalance")
+    if rb is None:
+        print("bench gate: no bench_autoscale.rebalance record",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if rb.get("moves", 0) < 1:
+        print("bench gate: the rebalancer executed no migrations",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if rb.get("unpriced_moves", 1) != 0:
+        print("bench gate: rebalance migrations not priced by the "
+              "interconnect", file=sys.stderr)
+        raise SystemExit(1)
+    if rb.get("quarantined_touched", 1) != 0:
+        print("bench gate: rebalance touched a quarantined pilot",
+              file=sys.stderr)
+        raise SystemExit(1)
+    if not rb.get("data_intact"):
+        print("bench gate: rebalance corrupted partition data",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)
+    gate(common.records())

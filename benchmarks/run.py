@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
 writes the machine-readable records (per-benchmark wall time, bytes staged,
-evictions) to a JSON artifact (default ``BENCH_pr7.json``; override with
+evictions) to a JSON artifact (default ``BENCH_pr10.json``; override with
 ``--json PATH``) so the perf trajectory is tracked across PRs.
 
 ``--quick`` is the CI smoke path: it runs the tiering, map_reduce,
@@ -21,7 +21,10 @@ replication / exceeds 1.5x the fault-free wall time, or the zero-copy
 plane misses its >= 3x view-over-copy fetch floor / regresses the
 steady-state map_reduce past the copy-mode baseline, or substrate LM
 serving exceeds 1.5x the isolated stack's p99 / loses requests or
-token-count exactness under the chaos kill.
+token-count exactness under the chaos kill, or the elastic autoscaler
+fails to beat the static-small fleet >= 1.2x under burst / loses a
+partition on scale-in / executes unpriced or quarantine-touching
+rebalance migrations.
 """
 from __future__ import annotations
 
@@ -33,7 +36,7 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-DEFAULT_JSON = "BENCH_pr9.json"
+DEFAULT_JSON = "BENCH_pr10.json"
 MULTIPILOT_MIN_SPEEDUP = 1.3
 CHECKPOINT_MIN_SPEEDUP = 1.0
 SESSION_MIN_SPEEDUP = 1.5
@@ -119,15 +122,20 @@ def _gate(records) -> None:
     # at equal batch, exact token accounting, chaos kill loses nothing
     from benchmarks import bench_serving
     bench_serving.gate(records)
+    # PR 10: elasticity — burst scale-out >= 1.2x static-small, scale-in
+    # drains with zero partition loss, rebalance migrations priced and
+    # never sourced from a quarantined pilot
+    from benchmarks import bench_autoscale
+    bench_autoscale.gate(records)
 
 
 def main() -> None:
-    from benchmarks import (bench_checkpoint, bench_fig6_startup,
-                            bench_fig7_storage, bench_fig8_profiles,
-                            bench_fig9_kmeans, bench_kernels,
-                            bench_mapreduce, bench_multipilot,
-                            bench_resilience, bench_roofline,
-                            bench_serving, bench_session,
+    from benchmarks import (bench_autoscale, bench_checkpoint,
+                            bench_fig6_startup, bench_fig7_storage,
+                            bench_fig8_profiles, bench_fig9_kmeans,
+                            bench_kernels, bench_mapreduce,
+                            bench_multipilot, bench_resilience,
+                            bench_roofline, bench_serving, bench_session,
                             bench_throughput, bench_tiering,
                             bench_train_step, bench_transport)
     from benchmarks import common
@@ -149,6 +157,7 @@ def main() -> None:
         bench_resilience.run(quick=True)
         bench_transport.run(quick=True)
         bench_serving.run(quick=True)
+        bench_autoscale.run(quick=True)
         common.write_json(json_path, meta={"mode": "quick"})
         print(f"# wrote {json_path}", file=sys.stderr)
         _gate(common.records())
@@ -158,8 +167,8 @@ def main() -> None:
                 bench_fig9_kmeans, bench_kernels, bench_tiering,
                 bench_mapreduce, bench_multipilot, bench_checkpoint,
                 bench_session, bench_throughput, bench_resilience,
-                bench_transport, bench_serving, bench_train_step,
-                bench_roofline):
+                bench_transport, bench_serving, bench_autoscale,
+                bench_train_step, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

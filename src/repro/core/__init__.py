@@ -23,6 +23,9 @@ v1 (the composable objects underneath — still public, still supported):
     cu.result()
 """
 from repro.core.analytics import KMeansResult, assign_partial, kmeans, make_blobs
+from repro.core.autoscaler import (Autoscaler, LoadScalingPolicy,
+                                   ScalingDecision, ScalingPolicy,
+                                   ScalingSignals)
 from repro.core.buf import (Buf, STATS as TRANSPORT_STATS, copy_mode,
                             set_zero_copy, zero_copy_enabled)
 from repro.core.codecs import (Codec, PickleCodec, RawCodec, decode_file,
@@ -38,6 +41,7 @@ from repro.core.pilot import (ComputeUnit, ComputeUnitDescription,
                               DurabilityDescription, MemoryDescription,
                               PilotCompute, PilotComputeDescription, State)
 from repro.core.pilotdata import PilotDataService
+from repro.core.rebalance import Migration, Rebalancer
 from repro.core.scheduling import (InterconnectModel, Link, LocalityPolicy,
                                    LocalityWeights, SchedulingPolicy)
 from repro.core.session import PilotSession
@@ -68,6 +72,9 @@ __all__ = [
     "DispatchQueue", "current_pilot", "read_partition",
     # the supervision layer (self-healing sessions)
     "PilotSupervisor", "FailureDetector", "Backoff", "RespawnEvent",
+    # the elasticity layer (autoscaling + proactive rebalancing)
+    "Autoscaler", "ScalingPolicy", "LoadScalingPolicy", "ScalingSignals",
+    "ScalingDecision", "Rebalancer", "Migration",
     # the zero-copy data plane (views, codecs, transport counters)
     "Buf", "TRANSPORT_STATS", "copy_mode", "set_zero_copy",
     "zero_copy_enabled", "Codec", "RawCodec", "PickleCodec",

@@ -5,7 +5,7 @@ The paper's point is that the Pilot-API stays identical across them.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 from repro.core.pilot import PilotCompute, PilotComputeDescription
 
@@ -62,6 +62,7 @@ class ComputeBackend:
         with real remote agents override this with their own probe."""
         from repro.core.pilot import State
         state = pilot.state
+        pool = pilot.worker_pool
         return {
             "pilot": pilot.id,
             "state": getattr(state, "value", str(state)),
@@ -70,7 +71,18 @@ class ComputeBackend:
             "heartbeat_age_s": pilot.heartbeat_age(),
             "busy": pilot.utilization > 0,
             "queued": pilot._queue.qsize(),
+            # load telemetry for the autoscaler (same probe the failure
+            # detector reads, so a stalled adaptor can't look idle)
+            "utilization": pilot.utilization,
+            "pool_depth": pool.queue.depth if pool is not None else 0,
+            "task_workers": getattr(pilot.desc, "task_workers", 0),
         }
+
+    def capacity(self) -> Optional[int]:
+        """How many MORE pilots this adaptor can provision right now, or
+        None for unknown/unbounded.  The autoscaler consults this before
+        scale-out so it never asks a full substrate for a node."""
+        return None
 
     def release(self, pilot: PilotCompute) -> None:
         pilot.cancel()

@@ -40,6 +40,14 @@ class InProcessBackend(ComputeBackend):
             self._leased.update(d.id for d in take)
             return take
 
+    def capacity(self):
+        """Free (unleased) devices — the hard scale-out bound when this
+        adaptor is not oversubscribing; unbounded (None) when it is."""
+        if self.oversubscribe:
+            return None
+        with self._lock:
+            return max(0, jax.device_count() - len(self._leased))
+
     def provision(self, desc: PilotComputeDescription) -> PilotCompute:
         t0 = time.time()
         n = max(1, min(desc.num_devices, jax.device_count()))

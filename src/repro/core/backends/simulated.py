@@ -175,11 +175,20 @@ class SimulatedClusterBackend(ComputeBackend):
     name = "simulated"
 
     def __init__(self, substrate: str = "yarn",
-                 policy: Optional[FaultPolicy] = None, use_devices: bool = True):
+                 policy: Optional[FaultPolicy] = None, use_devices: bool = True,
+                 max_pilots: Optional[int] = None):
         self.substrate = substrate
         self.policy = policy or FaultPolicy()
         self.use_devices = use_devices
+        self.max_pilots = max_pilots     # simulated queue/allocation limit
         self._provisioned = 0    # chaos targeting is by provision order
+
+    def capacity(self):
+        """Remaining simulated allocation (LRMS queue limit), counted by
+        lifetime provisions like chaos targeting; None = unbounded."""
+        if self.max_pilots is None:
+            return None
+        return max(0, self.max_pilots - self._provisioned)
 
     def provision(self, desc: PilotComputeDescription) -> PilotCompute:
         t0 = time.time()

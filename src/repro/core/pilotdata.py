@@ -90,6 +90,7 @@ class PilotDataService:
                  interconnect=None):
         self._managers: Dict[str, TierManager] = {}   # pilot id -> manager
         self._replicas: Dict[str, Set[str]] = {}      # key -> pilot ids
+        self._dus: Dict[str, object] = {}             # du name -> DataUnit
         self._lock = threading.Lock()                 # registry metadata
         self._stripes = [threading.Lock() for _ in range(_N_STRIPES)]
         self._inflight: Dict[tuple, Future] = {}
@@ -167,12 +168,21 @@ class PilotDataService:
         historical demand-driven behavior: replicas appear only where
         reads pull them."""
         du.pilot_data_service = self
+        with self._lock:
+            self._dus[du.name] = du
         if persist:
             self.persist(du)
         if replication > 0:
             with self._lock:
                 self._repl_targets[du.name] = (du, int(replication))
         return du
+
+    def data_units(self) -> List:
+        """Every DataUnit bound to this service (evacuation and
+        rebalancing sweep these — the replica registry alone maps keys,
+        not partitions)."""
+        with self._lock:
+            return list(self._dus.values())
 
     # -- supervisor liveness filter --------------------------------------
     def avoid_pilot(self, pilot_id: str) -> None:
@@ -525,6 +535,180 @@ class PilotDataService:
                 "per_partition": per_part,
                 "under": sum(1 for c in per_part.values() if c < target),
             }
+        return out
+
+    # -- scale-in drain / rebalancing ------------------------------------
+    def holder_load(self, pilot_id: str) -> Dict[str, int]:
+        """How much replica state a pilot is carrying right now:
+        ``{"partitions": n, "nbytes": total}`` of *live* replicas (the
+        registry entry must be backed by bytes in the pilot's tiers).
+        The autoscaler's victim choice and the rebalancer's skew
+        detection both rank pilots by this."""
+        tm = self._managers.get(pilot_id)
+        with self._lock:
+            keys = [k for k, pids in self._replicas.items()
+                    if pilot_id in pids]
+        parts, nbytes = 0, 0
+        if tm is not None and not getattr(tm, "_lost", False):
+            for k in keys:
+                if tm.tier_of(k) is None:
+                    continue
+                parts += 1
+                try:
+                    nbytes += int(tm.entry_nbytes(k))
+                except KeyError:
+                    continue
+        return {"partitions": parts, "nbytes": nbytes}
+
+    def _home_has(self, du, i: int) -> bool:
+        """Whether the DU's home placement still holds partition `i`
+        (metadata check — never pulls bytes through a throttled home)."""
+        key = du._key(i)
+        tm = getattr(du, "tier_manager", None)
+        if tm is not None:
+            return tm.tier_of(key) is not None
+        try:
+            return bool(du._backend(du.tier).exists(key))
+        except Exception:   # noqa: BLE001 - a released home tier == gone
+            return False
+
+    def drop_replica(self, du, i: int, pilot_id: str) -> bool:
+        """Remove ONE pilot's replica of partition `i` — the second half
+        of a migration (`invalidate` drops every replica; a rebalance
+        move must drop only the source's).  Stripe-locked against
+        replicate/invalidate races.  Like `invalidate`, a durable copy
+        that shared the pilot's spill store is re-persisted from the
+        surviving sources, so dropping a replica never costs durability.
+        Returns True when a registry entry was actually removed."""
+        key = du._key(i)
+        store = self.checkpoint_store
+        with self._stripe(key):
+            with self._lock:
+                pids = self._replicas.get(key)
+                held = pids is not None and pilot_id in pids
+                if held:
+                    pids.discard(pilot_id)
+                    if not pids:
+                        self._replicas.pop(key, None)
+            tm = self._managers.get(pilot_id)
+            if tm is None or tm.tier_of(key) is None:
+                return held
+            persisted = store is not None and store.exists(key)
+            snap = None
+            if persisted:
+                # the replica may BE the persisted copy (demoted into a
+                # spill tier sharing the store's directory): hold a view
+                # of the bytes before delete so we can re-persist
+                try:
+                    snap = tm.get(key)
+                except (KeyError, FileNotFoundError):
+                    snap = None
+            try:
+                tm.delete(key)
+            except Exception:   # noqa: BLE001 - a dying manager is fine
+                pass
+            if persisted and not store.exists(key):
+                # the delete purged the shared durable copy: restore it
+                # from the held view, or home / surviving replicas
+                try:
+                    val = (np.array(snap) if snap is not None
+                           else self._fetch(du, i, exclude=pilot_id))
+                    store.put(key, _as_nd(val))
+                except KeyError:
+                    pass
+        self.events.append({"op": "drop-replica", "key": key,
+                            "pilot": pilot_id})
+        return held
+
+    def evacuate_pilot(self, pilot_id: str, tier: str = "host") -> dict:
+        """The data half of the autoscaler's drain protocol: make every
+        partition resident in `pilot_id` survivable without it, then drop
+        the pilot's replicas.
+
+        Per resident partition, in order of preference: (1) it already
+        has another live replica, a readable home placement, or a durable
+        checkpoint copy — nothing to move; (2) migrate it to the
+        cheapest other pilot(s) (priced by the InterconnectModel when one
+        is attached, via the same `replicate` machinery repair uses), also
+        topping a declared ``replication=`` target back up *excluding*
+        the victim; (3) checkpoint-flush it as a last resort.  A
+        partition none of those can save is left in place and counted in
+        ``failed`` — the caller must then abort the release.
+
+        Returns ``{"partitions": scanned, "migrated": n, "flushed": n,
+        "dropped": n, "failed": n}``."""
+        out = {"partitions": 0, "migrated": 0, "flushed": 0,
+               "dropped": 0, "failed": 0}
+        tm = self._managers.get(pilot_id)
+        if tm is None:
+            return out
+        with self._lock:
+            dus = list(self._dus.values())
+            targets = {name: n for name, (_du, n) in
+                       self._repl_targets.items()}
+        flush_needed = False
+        for du in dus:
+            target = targets.get(du.name, 0)
+            for i in range(du.num_partitions):
+                key = du._key(i)
+                if not self._holds(pilot_id, key) or tm.tier_of(key) is None:
+                    continue
+                out["partitions"] += 1
+                survivors = [p for p in self._live_replicas(du, i)
+                             if p != pilot_id]
+                home_ok = self._home_has(du, i)
+                store = self.checkpoint_store
+                ckpt_ok = store is not None and store.exists(key)
+                # live copies required after the victim leaves: the
+                # declared replication target, and at least one anywhere
+                # when no durable/home source could restore the bytes
+                need = target
+                if not (home_ok or ckpt_ok):
+                    need = max(1, need)
+                missing = need - len(survivors)
+                if missing > 0:
+                    with self._lock:
+                        avoid = set(self._avoid)
+                        cands = [pid for pid, m in self._managers.items()
+                                 if pid != pilot_id and pid not in avoid
+                                 and pid not in survivors
+                                 and not getattr(m, "_lost", False)]
+                    ic = self.interconnect
+                    if ic is not None and cands:
+                        nb = self.partition_nbytes(du, i)
+                        cands.sort(key=lambda pid:
+                                   ic.transfer_cost(pilot_id, pid, nb))
+                    for pid in cands:
+                        try:
+                            self.replicate(du, i, pid, tier)
+                        except (CapacityError, KeyError,
+                                FileNotFoundError):
+                            continue
+                        survivors.append(pid)
+                        out["migrated"] += 1
+                        if len(survivors) >= need:
+                            break
+                if not survivors and not (home_ok or ckpt_ok):
+                    # nowhere to migrate: checkpoint-flush the victim's
+                    # own bytes (it may hold the only copy — the home
+                    # read `persist` does would miss), the paper's
+                    # durable-tier escape hatch for scale-in
+                    try:
+                        if store is None:
+                            raise KeyError(key)
+                        store.put(key, _as_nd(tm.get(key)))
+                    except (KeyError, FileNotFoundError):
+                        out["failed"] += 1
+                        continue
+                    with self._lock:
+                        self.counters["persists"] += 1
+                    out["flushed"] += 1
+                    flush_needed = True
+                self.drop_replica(du, i, pilot_id)
+                out["dropped"] += 1
+        if flush_needed:
+            self.flush_checkpoints()    # durability barrier before release
+        self.events.append({"op": "evacuate", "pilot": pilot_id, **out})
         return out
 
     # -- reads -----------------------------------------------------------

@@ -65,9 +65,9 @@ class LocalityWeights:
     sibling: float = W_SIBLING
 
 
-# guards lazy creation of per-policy quarantine state: SchedulingPolicy
+# guards lazy creation of per-policy quarantine/drain state: SchedulingPolicy
 # deliberately has no __init__ (subclasses in the wild don't call super()),
-# so the set is attached on first use under this module lock instead
+# so the sets are attached on first use under this module lock instead
 _QUARANTINE_INIT_LOCK = threading.Lock()
 
 
@@ -86,7 +86,15 @@ class SchedulingPolicy:
     CLOSED (quarantining the whole fleet yields an empty eligible list,
     making late binding wait for a respawn rather than routing work onto
     a suspect).  Quarantine is reversible: ``readmit()`` lifts it when
-    heartbeats resume."""
+    heartbeats resume.
+
+    A parallel *draining* set serves the autoscaler's scale-in protocol:
+    ``drain()`` quiesces scheduling on a victim pilot — ``eligible()``
+    stops returning it, so no new CU, engine task, or serving request
+    routes there — while the pilot itself stays healthy, keeps executing
+    its accepted backlog, and keeps serving replica reads until its
+    partitions have migrated.  ``undrain()`` lifts it (a drain aborted by
+    a racing failure hands the pilot back to normal scheduling)."""
 
     name = "policy"
 
@@ -112,13 +120,38 @@ class SchedulingPolicy:
     def quarantined(self) -> frozenset:
         return frozenset(self._qset())
 
+    # -- draining (autoscaler-driven scale-in quiesce) -------------------
+    def _dset(self) -> set:
+        d = getattr(self, "_draining", None)
+        if d is None:
+            with _QUARANTINE_INIT_LOCK:
+                d = getattr(self, "_draining", None)
+                if d is None:
+                    d = set()
+                    self._draining = d
+        return d
+
+    def drain(self, pilot_id: str) -> None:
+        """Quiesce scheduling on a pilot ahead of scale-in: no new work
+        routes to it, but it stays healthy and finishes its backlog."""
+        self._dset().add(pilot_id)
+
+    def undrain(self, pilot_id: str) -> None:
+        self._dset().discard(pilot_id)
+
+    @property
+    def draining(self) -> frozenset:
+        return frozenset(self._dset())
+
     def eligible(self, pilots: Sequence) -> List:
-        """`pilots` minus the quarantined ones.  Fails closed: may be
-        empty — the caller must wait/retry, never fall back to a suspect."""
+        """`pilots` minus the quarantined and draining ones.  Fails
+        closed: may be empty — the caller must wait/retry, never fall
+        back to a suspect (or route fresh work onto a draining victim)."""
         q = self._qset()
-        if not q:
+        d = self._dset()
+        if not q and not d:
             return list(pilots)
-        return [p for p in pilots if p.id not in q]
+        return [p for p in pilots if p.id not in q and p.id not in d]
 
     def score(self, pilot, cu_desc) -> float:
         raise NotImplementedError

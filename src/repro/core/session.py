@@ -77,6 +77,17 @@ class PilotSession:
         for DataUnits declared with `data(..., replication=n)`.  Extra
         keyword knobs go through `supervisor_kwargs` (e.g.
         ``supervisor_kwargs={"interval_s": 0.02}``).
+    autoscale: True makes the session elastic — an Autoscaler monitor
+        thread grows/shrinks the fleet between `min_pilots` and
+        `max_pilots` from live load (task-engine backlog, worker
+        utilization, tier pressure, serving queue wait), scaling out by
+        cloning the fleet's own description and scaling in through the
+        drain protocol (quiesce -> serving handoff -> evacuate every
+        resident partition -> release).  Extra knobs go through
+        `autoscaler_kwargs` (e.g. ``{"policy": LoadScalingPolicy(...)}``).
+    rebalance: True starts a background Rebalancer migrating partitions
+        off pressure-skewed pilots onto idle ones, priced by the
+        session's InterconnectModel; knobs via `rebalancer_kwargs`.
     """
 
     def __init__(self, *, policy: Optional[SchedulingPolicy] = None,
@@ -85,7 +96,12 @@ class PilotSession:
                  prebind_wait_s: Optional[float] = None,
                  history_limit: int = 1024, name: str = "",
                  supervise: bool = False,
-                 supervisor_kwargs: Optional[dict] = None):
+                 supervisor_kwargs: Optional[dict] = None,
+                 autoscale: bool = False, min_pilots: int = 1,
+                 max_pilots: int = 8,
+                 autoscaler_kwargs: Optional[dict] = None,
+                 rebalance: bool = False,
+                 rebalancer_kwargs: Optional[dict] = None):
         self.name = name or f"session-{uuid.uuid4().hex[:8]}"
         self.interconnect = interconnect
         if policy is None:
@@ -104,14 +120,37 @@ class PilotSession:
         self._host_backend = make_backend("host")
         self._scratch: Optional[str] = None
         self._closed = False
+        # serving engines register themselves here (ServingEngine.deploy)
+        # so the autoscaler can read their queue-wait signal and hand off
+        # a draining pilot's replica before release
+        self.serving_engines: List = []
         self._supervisor: Optional[PilotSupervisor] = None
         if supervise:
             self._supervisor = PilotSupervisor(
                 self, **(supervisor_kwargs or {})).start()
+        self._autoscaler = None
+        self._rebalancer = None
+        if autoscale:
+            from repro.core.autoscaler import Autoscaler
+            self._autoscaler = Autoscaler(
+                self, min_pilots=min_pilots, max_pilots=max_pilots,
+                **(autoscaler_kwargs or {})).start()
+        if rebalance:
+            from repro.core.rebalance import Rebalancer
+            self._rebalancer = Rebalancer(
+                self, **(rebalancer_kwargs or {})).start()
 
     @property
     def supervisor(self) -> Optional[PilotSupervisor]:
         return self._supervisor
+
+    @property
+    def autoscaler(self):
+        return self._autoscaler
+
+    @property
+    def rebalancer(self):
+        return self._rebalancer
 
     # -- lifecycle -------------------------------------------------------
     def __enter__(self) -> "PilotSession":
@@ -139,6 +178,13 @@ class PilotSession:
         if self._closed:
             return
         self._closed = True
+        # the fleet-resizing loops stop before the supervisor: a drain
+        # mid-flight finishes or aborts while the failure detector can
+        # still tell a released pilot from a dead one
+        if self._autoscaler is not None:
+            self._autoscaler.close()
+        if self._rebalancer is not None:
+            self._rebalancer.close()
         if self._supervisor is not None:
             self._supervisor.close()
         self.data_service.drain(timeout=30)
@@ -340,6 +386,10 @@ class PilotSession:
                "transport": _transport_stats.snapshot()}
         if self._supervisor is not None:
             out["supervisor"] = self._supervisor.stats()
+        if self._autoscaler is not None:
+            out["autoscaler"] = self._autoscaler.stats()
+        if self._rebalancer is not None:
+            out["rebalancer"] = self._rebalancer.stats()
         return out
 
     def __repr__(self) -> str:

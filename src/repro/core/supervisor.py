@@ -277,6 +277,13 @@ class PilotSupervisor:
     def quarantined(self) -> frozenset:
         return frozenset(self._quarantined)
 
+    @property
+    def handled(self) -> frozenset:
+        """Dead pilots this supervisor has already replaced (or given up
+        on): the autoscaler must never pick one as a scale-in victim —
+        respawn and scale-out share the provision path, not the corpse."""
+        return frozenset(self._handled)
+
     # -- the monitor loop ------------------------------------------------
     def _run(self) -> None:
         while not self._stop.wait(self.interval_s):

@@ -8,6 +8,16 @@ mechanical half for JAX: given survivors, build the largest well-formed
 table, and device_put host state into the new placement. Model-parallel
 degree is preserved when possible (weights reshard cheaply along data) and
 reduced only when survivors < model_parallel.
+
+Since PR 10 the grow/shrink half of that loop belongs to the elasticity
+layer (``repro.core.autoscaler``): an ``ElasticController`` built with a
+``session=`` holds a manual (non-monitoring) ``Autoscaler`` and delegates
+``grow``/``shrink`` to its ``scale_out``/``scale_in`` — scale-in runs the
+full drain protocol (quiesce, serving handoff, partition evacuation)
+before the mesh re-forms over the survivors — mirroring how
+``runtime/fault_tolerance.py`` delegates detect/replace to the PR-7
+supervisor.  The mesh math (``plan_mesh``/``build_mesh``/
+``reshard_state``) and the session-less controller surface are unchanged.
 """
 from __future__ import annotations
 
@@ -58,14 +68,31 @@ def reshard_state(host_state, spec_tree, mesh: Mesh, rules: AxisRules):
 
 
 class ElasticController:
-    """Track live devices; rebuild mesh + shardings on membership change."""
+    """Track live devices; rebuild mesh + shardings on membership change.
 
-    def __init__(self, model_parallel: int, rules: Optional[AxisRules] = None):
+    Built bare (``ElasticController(mp)``) it is the pure mesh-math
+    controller it always was.  Built with ``session=``, it additionally
+    owns a manual ``repro.core.autoscaler.Autoscaler`` (no monitor
+    thread — membership changes are the caller's verbs here) and gains
+    ``grow``/``shrink``: fleet changes go through the autoscaler's
+    provision/drain protocol, then the mesh re-forms over the live
+    pilots' devices."""
+
+    def __init__(self, model_parallel: int, rules: Optional[AxisRules] = None,
+                 *, session=None, min_pilots: int = 1, max_pilots: int = 8,
+                 **autoscaler_kwargs):
         self.model_parallel = model_parallel
         self.rules = rules or AxisRules()
         self.generation = 0
         self.mesh: Optional[Mesh] = None
         self.events: List[dict] = []
+        self.session = session
+        self.autoscaler = None
+        if session is not None:
+            from repro.core.autoscaler import Autoscaler
+            self.autoscaler = Autoscaler(session, min_pilots=min_pilots,
+                                         max_pilots=max_pilots,
+                                         **autoscaler_kwargs)
 
     def form(self, devices: Sequence) -> Mesh:
         plan = plan_mesh(len(devices), self.model_parallel)
@@ -81,3 +108,39 @@ class ElasticController:
 
     def on_join(self, devices) -> Mesh:
         return self.form(devices)
+
+    # -- session-backed elasticity (delegates to the autoscaler) ---------
+    def _session_devices(self) -> List:
+        """The live fleet's devices, deduped in provision order (pilots
+        may share devices on an oversubscribed in-process backend)."""
+        from repro.core.pilot import State
+        seen, devs = set(), []
+        for p in self.session.pilots:
+            if p.state is not State.RUNNING or p.mesh is None:
+                continue
+            for d in p.mesh.devices.flat:
+                if d.id not in seen:
+                    seen.add(d.id)
+                    devs.append(d)
+        return devs
+
+    def grow(self, n: int = 1) -> Mesh:
+        """Scale the fleet out by up to `n` pilots and re-form the mesh
+        over the enlarged fleet's devices."""
+        if self.autoscaler is None:
+            raise RuntimeError("ElasticController.grow needs session=")
+        self.autoscaler.scale_out(n, reason="elastic.grow")
+        return self.form(self._session_devices())
+
+    def shrink(self, pilot=None) -> Mesh:
+        """Drain one pilot out of the fleet (full scale-in protocol:
+        quiesce, evacuate partitions, release) and re-form the mesh over
+        the survivors."""
+        if self.autoscaler is None:
+            raise RuntimeError("ElasticController.shrink needs session=")
+        self.autoscaler.scale_in(pilot, reason="elastic.shrink")
+        return self.form(self._session_devices())
+
+    def close(self) -> None:
+        if self.autoscaler is not None:
+            self.autoscaler.close()

@@ -263,7 +263,7 @@ class ServingEngine:
         self._reaper: Optional[threading.Thread] = None
         self.counters = {"tokens_served": 0, "decode_steps": 0,
                          "refills": 0, "waves": 0, "recovered_requests": 0,
-                         "replica_deaths": 0}
+                         "replica_deaths": 0, "drained_replicas": 0}
 
     # -- deployment ------------------------------------------------------
     def deploy(self, reaper_interval_s: float = 0.05) -> "ServingEngine":
@@ -299,6 +299,11 @@ class ServingEngine:
             target=self._reaper_loop, args=(reaper_interval_s,),
             daemon=True, name=f"{self.name}-reaper")
         self._reaper.start()
+        # the session's autoscaler reads load() from here and asks for
+        # replica handoff before scaling a serving pilot in
+        engines = getattr(self.session, "serving_engines", None)
+        if engines is not None and self not in engines:
+            engines.append(self)
         return self
 
     def _attach_replica(self, pilot) -> None:
@@ -590,35 +595,82 @@ class ServingEngine:
             if not rep.dead:    # loop didn't self-detect (e.g. it crashed)
                 with self._lock:
                     self.counters["replica_deaths"] += 1
-            rep.dead = True
-            rep.stop.set()
-            rep.wake()
-            # join the resident loop before draining so the row map is
-            # quiescent — no request can be half-owned during recovery
-            if rep.task is not None:
-                try:
-                    rep.task.result(timeout=5.0)
-                except Exception:   # noqa: BLE001 - crash IS the signal
-                    pass
-            with self._lock:
-                self._replicas.pop(pid, None)
-            for req in rep.drain():
-                if not req.done:
-                    self._recover(req)
-        # adopt respawned pilots (fresh ids; the supervisor respawns from
-        # the dead pilot's own description)
+            self._retire_replica(pid, rep)
+        # adopt respawned and scaled-out pilots (fresh ids; respawn and
+        # scale-out share the provision path) — but never a draining one:
+        # a drained-but-still-RUNNING victim must not be instantly
+        # re-adopted while the autoscaler evacuates it
         pds = self.session.data_service
+        draining = getattr(self.session.manager.policy, "draining",
+                           frozenset())
         with self._lock:
             known = set(self._replicas)
         for p in self.session.pilots:
             if (p.state is State.RUNNING and p.id not in known
-                    and pds.knows(p.id)):
+                    and p.id not in draining and pds.knows(p.id)):
                 self._attach_replica(p)
         with self._lock:
             parked = list(self._unrouted)
             self._unrouted.clear()
         for req in parked:
             self._route(req)
+
+    def _retire_replica(self, pid: str, rep: _Replica) -> None:
+        """Take one replica out of the fleet and re-home every request it
+        owes — the single retirement path shared by reaped-dead replicas
+        and autoscaler-drained live ones."""
+        rep.dead = True
+        rep.stop.set()
+        rep.wake()
+        # join the resident loop before draining so the row map is
+        # quiescent — no request can be half-owned during recovery
+        if rep.task is not None:
+            try:
+                rep.task.result(timeout=5.0)
+            except Exception:   # noqa: BLE001 - crash IS the signal
+                pass
+        with self._lock:
+            self._replicas.pop(pid, None)
+        for req in rep.drain():
+            if not req.done:
+                self._recover(req)
+
+    def drain_replica(self, pilot_id: str) -> int:
+        """Hand off a still-healthy replica ahead of scale-in: stop its
+        decode loop and recover its in-flight requests from durable KV
+        pages exactly like a reaped dead replica's.  Returns the number
+        of requests handed off; 0 when the pilot serves no replica."""
+        with self._lock:
+            rep = self._replicas.get(pilot_id)
+        if rep is None:
+            return 0
+        owed = len(rep.queue) + len(rep.active)
+        self._retire_replica(pilot_id, rep)
+        with self._lock:
+            self.counters["drained_replicas"] += 1
+        return owed
+
+    def load(self) -> dict:
+        """The autoscaler's serving signal: routed-but-unfinished request
+        count and the oldest such request's age."""
+        now = time.perf_counter()
+        oldest: Optional[float] = None
+        queued = 0
+        with self._lock:
+            reps = list(self._replicas.values())
+            unrouted = list(self._unrouted)
+        waiting: List[ServeRequest] = list(unrouted)
+        for rep in reps:
+            with rep.cond:
+                waiting.extend(rep.queue)
+        for req in waiting:
+            if req.done:
+                continue
+            queued += 1
+            if oldest is None or req.t_submit < oldest:
+                oldest = req.t_submit
+        return {"queued": queued,
+                "oldest_wait_s": 0.0 if oldest is None else now - oldest}
 
     def _recover(self, req: ServeRequest) -> None:
         """Rebuild a request from the durable tier: the KV-page partition
@@ -665,6 +717,9 @@ class ServingEngine:
         if self._closed:
             return
         self._closed = True
+        engines = getattr(self.session, "serving_engines", None)
+        if engines is not None and self in engines:
+            engines.remove(self)
         self._reaper_stop.set()
         if self._reaper is not None:
             self._reaper.join(timeout)

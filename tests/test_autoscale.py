@@ -1,0 +1,340 @@
+"""Elasticity (PR 10): autoscaler scaling decisions, the scale-in drain
+protocol, proactive rebalancing, and the supervisor/serving interactions.
+
+The contracts under test:
+
+  * LoadScalingPolicy hysteresis: one hot sample never scales, a
+    sustained breach does, and scale-in needs a longer cold streak;
+  * a draining pilot stops receiving work (`eligible`) but stays
+    readable, and undrain restores it;
+  * scale-out clones the fleet's own description, joins the new pilot to
+    the data service, and records a decision carrying the signal values;
+  * drain-then-release never loses a partition (hypothesis property:
+    every partition registered before scale-in is byte-identical
+    readable after, from a surviving replica or the checkpoint tier);
+  * scale-in racing a chaos kill picks a DISTINCT victim and both
+    recover (supervisor respawns the corpse, autoscaler releases its own
+    pick cleanly);
+  * a drained serving replica hands off its in-flight requests like a
+    reaped one — byte-exact outputs, nothing re-adopted mid-drain;
+  * the rebalancer moves partitions off a pressure-skewed donor through
+    replicate-then-drop, prices every move, and never touches a
+    quarantined pilot.
+"""
+import tempfile
+import time
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Autoscaler, InterconnectModel, Link,
+                        LoadScalingPolicy, PilotSession, Rebalancer,
+                        ScalingSignals)
+from repro.core.backends.base import register_backend
+from repro.core.backends.simulated import (ChaosEvent, ChaosPolicy,
+                                           SimulatedClusterBackend)
+from repro.core.pilot import State
+from repro.serving import ServingEngine
+
+
+# -- unit: policy hysteresis -------------------------------------------------
+def test_load_policy_hysteresis_and_watermarks():
+    pol = LoadScalingPolicy(scale_out_load=1.5, scale_in_load=0.25,
+                            hysteresis=2, in_hysteresis=3)
+    hot = ScalingSignals(n_pilots=1, queue_depth=6, workers=2, load=3.0)
+    cold = ScalingSignals(n_pilots=2, queue_depth=0, workers=4, load=0.0)
+    mid = ScalingSignals(n_pilots=2, queue_depth=2, workers=4, load=0.5)
+    # one hot sample holds; the second fires
+    assert pol.decide(hot)[0] == "hold"
+    action, reason = pol.decide(hot)
+    assert action == "out" and "load 3.00" in reason
+    # a mid sample resets BOTH streaks
+    assert pol.decide(mid)[0] == "hold"
+    assert pol.decide(hot)[0] == "hold"       # streak restarted
+    # scale-in needs in_hysteresis consecutive cold samples
+    assert pol.decide(cold)[0] == "hold"
+    assert pol.decide(cold)[0] == "hold"
+    assert pol.decide(cold)[0] == "in"
+    # tier pressure alone is a hot signal even with an empty queue
+    squeezed = ScalingSignals(n_pilots=1, workers=2, tier_pressure=0.99)
+    pol2 = LoadScalingPolicy(hysteresis=1)
+    action, reason = pol2.decide(squeezed)
+    assert action == "out" and "tier pressure" in reason
+    # equal watermarks would oscillate: rejected at construction
+    with pytest.raises(ValueError):
+        LoadScalingPolicy(scale_out_load=1.0, scale_in_load=1.0)
+
+
+# -- drain quiesces scheduling ----------------------------------------------
+def test_draining_pilot_stops_receiving_work():
+    with PilotSession() as s:
+        a, b = s.add_pilots(2, memory_gb=0.05)
+        pol = s.manager.policy
+        pol.drain(a.id)
+        assert set(p.id for p in pol.eligible([a, b])) == {b.id}
+        # fails closed: all pilots draining/quarantined => empty, no
+        # fallback onto the victim
+        pol.quarantine(b.id)
+        assert pol.eligible([a, b]) == []
+        pol.undrain(a.id)
+        pol.readmit(b.id)
+        assert len(pol.eligible([a, b])) == 2
+        # while draining, work routes around the victim but the victim
+        # still finishes what it already accepted
+        pol.drain(a.id)
+        batch = s.submit_tasks([(lambda x: x + 1, (i,)) for i in range(8)])
+        assert batch.results(timeout=30) == list(range(1, 9))
+        pol.undrain(a.id)
+
+
+# -- scale-out ---------------------------------------------------------------
+def test_scale_out_clones_fleet_and_records_decision():
+    with PilotSession() as s:
+        s.add_pilots(1, memory_gb=0.05)
+        a = Autoscaler(s, min_pilots=1, max_pilots=2)
+        added = a.scale_out(reason="unit")
+        assert len(added) == 1
+        p = added[0]
+        # the clone carries managed memory and joined the data service
+        assert p.tier_manager is not None
+        assert s.data_service.knows(p.id)
+        # at max_pilots: rejected, and the rejection is itself a decision
+        assert a.scale_out() == []
+        actions = [d.action for d in a.decisions]
+        assert actions == ["scale-out", "reject-out"]
+        # every decision carries the signal snapshot that drove it
+        assert all("n_pilots" in d.signals for d in a.decisions)
+        stats = a.stats()
+        assert stats["counters"]["scale_outs"] == 1
+        assert stats["counters"]["rejects"] == 1
+
+
+def test_scale_in_respects_min_pilots_floor():
+    with PilotSession() as s:
+        s.add_pilots(1, memory_gb=0.05)
+        a = Autoscaler(s, min_pilots=1, max_pilots=4)
+        assert a.scale_in() is None
+        assert a.decisions[-1].action == "reject-in"
+        assert len(s.pilots) == 1
+
+
+def test_scale_in_never_picks_quarantined_pilot():
+    with PilotSession() as s:
+        pilots = s.add_pilots(3, memory_gb=0.05)
+        sick = pilots[0]
+        s.manager.policy.quarantine(sick.id)
+        a = Autoscaler(s, min_pilots=1, max_pilots=4)
+        victim = a.scale_in()
+        assert victim is not None and victim.id != sick.id
+        # the sick pilot is still provisioned, just quarantined
+        assert sick.state is State.RUNNING
+
+
+# -- property: drain-then-release never loses a partition --------------------
+@settings(max_examples=6)
+@given(parts=st.integers(min_value=2, max_value=5),
+       replication=st.integers(min_value=0, max_value=2),
+       persist=st.booleans(),
+       load_victim=st.booleans())
+def test_scale_in_never_loses_a_partition(parts, replication, persist,
+                                          load_victim):
+    """Every partition registered before scale-in must be byte-identical
+    readable after — from a surviving replica or the checkpoint tier —
+    across random replication/persistence/placement shapes."""
+    rng = np.random.default_rng(parts * 10 + replication * 2 + persist)
+    ref = rng.normal(size=(parts * 16, 3)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as ckpt:
+        with PilotSession(checkpoint_dir=ckpt) as s:
+            s.add_pilots(3, memory_gb=0.05, host_memory_gb=0.2)
+            du = s.data("pts", ref, parts=parts, replication=replication,
+                        persist=persist)
+            a = Autoscaler(s, min_pilots=1, max_pilots=4)
+            victim = None
+            if load_victim:
+                # pile every partition onto one pilot, then target it
+                victim = s.pilots[0]
+                s.data_service.replicate_to_pilot(du, victim.id,
+                                                  tier="host")
+            released = a.scale_in(victim)
+            assert released is not None
+            d = a.decisions[-1]
+            assert d.action == "scale-in" and d.pilot == released.id
+            assert d.detail["evacuated"].get("failed", 0) == 0
+            # the audit: every partition byte-identical
+            got = np.concatenate([np.asarray(du.partition(i))
+                                  for i in range(parts)], axis=0)
+            np.testing.assert_array_equal(got, ref)
+
+
+# -- supervisor interaction: scale-in racing a chaos kill --------------------
+def test_scale_in_racing_chaos_kill_picks_distinct_victim():
+    register_backend(SimulatedClusterBackend(
+        substrate="slurm",
+        policy=ChaosPolicy(events=(ChaosEvent(at_s=0.15, action="kill"),),
+                           target_index=0)))
+    s = PilotSession(supervise=True,
+                     supervisor_kwargs={"interval_s": 0.02,
+                                        "min_heartbeat_s": 0.05})
+    try:
+        doomed = s.add_pilot(backend="simulated", startup_seconds=0.01,
+                             memory_gb=0.05)
+        s.add_pilots(2, backend="simulated", startup_seconds=0.01,
+                     memory_gb=0.05)
+        a = Autoscaler(s, min_pilots=1, max_pilots=4)
+        # wait for the kill to land, then immediately race the scale-in
+        # against the supervisor's detection/respawn
+        deadline = time.monotonic() + 5.0
+        while doomed.state is State.RUNNING:
+            assert time.monotonic() < deadline, "chaos kill never fired"
+            time.sleep(0.01)
+        released = None
+        deadline = time.monotonic() + 8.0
+        while released is None and time.monotonic() < deadline:
+            released = a.scale_in(reason="race")
+        assert released is not None, "scale-in never completed"
+        assert released.id != doomed.id     # distinct victims
+        # both recover: the corpse is respawned by the supervisor, the
+        # released pilot is NOT (deliberate releases are forgotten)
+        deadline = time.monotonic() + 8.0
+        while not s.supervisor.respawns:
+            assert time.monotonic() < deadline, "kill never respawned"
+            time.sleep(0.02)
+        assert s.supervisor.respawns[0].old_pilot == doomed.id
+        time.sleep(0.2)     # give the monitor a chance to misfire
+        assert all(ev.old_pilot != released.id
+                   for ev in s.supervisor.respawns)
+        running = [p for p in s.pilots if p.state is State.RUNNING]
+        assert len(running) == 2            # 3 - killed - released + respawn
+    finally:
+        s.close()
+
+
+# -- serving: drained replicas hand off like reaped ones ---------------------
+class _StubModel:
+    """next = (last + 1) % vocab (same exact-token stub as test_serving)."""
+
+    def __init__(self, vocab=32, delay=0.0):
+        self.cfg = SimpleNamespace(name="stub", vocab_size=vocab,
+                                   vision_tokens=0, encoder_layers=0)
+        self.vocab = vocab
+        self.delay = delay
+
+    def init(self, key):
+        return {"w": jnp.zeros((4,), jnp.float32)}
+
+    def _step(self, last):
+        logits = jax.nn.one_hot((last + 1) % self.vocab, self.vocab) * 100.0
+        return logits, {"last": last.astype(jnp.int32).reshape(-1, 1)}
+
+    def _sleep(self):
+        time.sleep(self.delay)
+        return np.int32(0)
+
+    def prefill(self, params, batch, max_len):
+        return self._step(batch["tokens"][:, -1])
+
+    def decode(self, params, cache, tokens, positions):
+        tok = tokens[:, 0]
+        if self.delay:
+            pause = jax.experimental.io_callback(
+                self._sleep, jax.ShapeDtypeStruct((), jnp.int32),
+                ordered=True)
+            tok = tok + pause
+        return self._step(tok)
+
+
+def _expected(prompt, gen, vocab=32):
+    return [(int(prompt[-1]) + 1 + i) % vocab for i in range(gen)]
+
+
+def test_serving_drain_replica_hands_off_in_flight_requests():
+    model = _StubModel(delay=0.02)      # slow decode: drain lands mid-run
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 32, size=5).astype(np.int32)
+               for _ in range(4)]
+    with tempfile.TemporaryDirectory() as ckpt:
+        with PilotSession(checkpoint_dir=ckpt) as s:
+            pilots = s.add_pilots(2, memory_gb=0.25)
+            with ServingEngine(s, model, batch_size=2, max_len=32,
+                               page_tokens=2) as eng:
+                eng.deploy(reaper_interval_s=0.02)
+                assert eng in s.serving_engines
+                reqs = [eng.submit(p, 6) for p in prompts]
+                time.sleep(0.08)        # let decode start on both replicas
+                # the autoscaler's handoff order: mark draining FIRST so
+                # the reaper cannot instantly re-adopt the live pilot
+                s.manager.policy.drain(pilots[0].id)
+                eng.drain_replica(pilots[0].id)
+                eng.drain(timeout=60)
+                for p, r in zip(prompts, reqs):
+                    assert r.result(timeout=5) == _expected(p, 6)
+                st_ = eng.stats()
+                assert st_["drained_replicas"] == 1
+                assert pilots[0].id not in st_["replicas"]
+                s.manager.policy.undrain(pilots[0].id)
+            assert eng not in s.serving_engines     # close deregisters
+
+
+# -- session wiring ----------------------------------------------------------
+def test_session_autoscale_stats_surface():
+    s = PilotSession(autoscale=True, min_pilots=1, max_pilots=3,
+                     autoscaler_kwargs={"interval_s": 0.02},
+                     rebalance=True,
+                     rebalancer_kwargs={"interval_s": 0.05})
+    try:
+        s.add_pilots(1, memory_gb=0.05)
+        assert s.autoscaler is not None and s.rebalancer is not None
+        time.sleep(0.1)                 # a few monitor ticks
+        stats = s.stats()
+        assert stats["autoscaler"]["min_pilots"] == 1
+        assert stats["autoscaler"]["counters"]["ticks"] >= 1
+        assert "counters" in stats["rebalancer"]
+    finally:
+        s.close()
+    # idempotent, and the loops are stopped
+    s.close()
+
+
+# -- rebalancer --------------------------------------------------------------
+def test_rebalancer_moves_skew_priced_and_avoids_quarantined():
+    ic = InterconnectModel(default=Link(gbps=10.0, latency_s=1e-4))
+    with PilotSession(interconnect=ic) as s:
+        pilots = s.add_pilots(3, memory_gb=0.05, host_memory_gb=0.2)
+        donor, receiver, sick = pilots
+        rng = np.random.default_rng(11)
+        ref = rng.normal(size=(96, 4)).astype(np.float32)
+        du = s.data("pts", ref, parts=6)
+        # pile every partition onto one pilot => maximal skew
+        s.data_service.replicate_to_pilot(du, donor.id, tier="host")
+        # the third pilot is quarantined: never a donor OR receiver
+        s.manager.policy.quarantine(sick.id)
+        s.data_service.avoid_pilot(sick.id)
+        r = Rebalancer(s, skew=1.2, max_moves=4)
+        done = [m for m in r.rebalance_once() if m.status == "done"]
+        assert done, "no migration executed"
+        for m in done:
+            assert m.src == donor.id
+            assert m.dst == receiver.id         # never the quarantined one
+            assert m.cost_s > 0.0               # priced by the interconnect
+            assert m.nbytes > 0
+        stats = r.stats()
+        assert stats["counters"]["migrations"] == len(done)
+        assert stats["counters"]["bytes_moved"] == sum(m.nbytes
+                                                       for m in done)
+        # data intact after the moves
+        got = np.concatenate([np.asarray(du.partition(i))
+                              for i in range(6)], axis=0)
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_rebalancer_noop_when_balanced():
+    with PilotSession() as s:
+        s.add_pilots(2, memory_gb=0.05)
+        r = Rebalancer(s)
+        assert r.plan() == []
+        assert r.rebalance_once() == []
